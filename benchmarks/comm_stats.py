@@ -1,0 +1,68 @@
+"""Message statistics (paper §5).
+
+    "on the SuperMUC machine with 32 nodes (512 cores), each MPI rank
+    contains approximately 1.6e7 particles in 2.5e5 cells. SWIFT will
+    generate around 58 000 point-to-point asynchronous MPI communications
+    (a pair of send and recv tasks) per node and per time-step. Each one of
+    these communications involves, on average, no more than 6 kB of data."
+
+We measure the same quantities from the comm planner on a scaled-down grid
+(the surface-to-volume accounting is scale-free) and extrapolate to the
+paper's cells-per-rank with the measured boundary fraction.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import decompose_with_comm
+from .common import build_clustered_taskgraph, emit
+from .strong_scaling import PHASES
+
+PAPER_CELLS_PER_RANK = 2.5e5
+PAPER_MSGS_PER_RANK = 58_000
+PAPER_MEAN_KB = 6.0
+PAPER_PARTICLES_PER_RANK = 1.6e7
+
+
+def run(n_particles=8000, ranks=8):
+    g, ncells, occupancy = build_clustered_taskgraph(n_particles)
+    particle_bytes = 64.0
+    cell_bytes = [float(max(o, 1)) * particle_bytes for o in occupancy]
+    dist, dec = decompose_with_comm(g, ncells, ranks,
+                                    cell_bytes=cell_bytes, phases=PHASES)
+    stats = dec.comm
+    cells_per_rank = ncells / ranks
+    msgs_per_rank = stats.messages / ranks
+    boundary_msgs_per_cell = msgs_per_rank / cells_per_rank
+
+    # extrapolate: messages/rank ∝ boundary cells ∝ (cells/rank)^(2/3)·const
+    scale = (PAPER_CELLS_PER_RANK / cells_per_rank) ** (2.0 / 3.0)
+    extrapolated = msgs_per_rank * scale
+
+    rows = [{
+        "name": "comm_stats/messages_per_rank",
+        "us_per_call": "",
+        "derived": f"{msgs_per_rank:.0f} msgs/rank/step "
+                   f"({ncells} cells, {ranks} ranks)",
+    }, {
+        "name": "comm_stats/mean_message_kB",
+        "us_per_call": "",
+        "derived": f"{stats.mean_message_bytes / 1024:.2f} kB "
+                   f"(paper: ≤{PAPER_MEAN_KB} kB)",
+    }, {
+        "name": "comm_stats/extrapolated_paper_scale",
+        "us_per_call": "",
+        "derived": f"{extrapolated:.0f} msgs/rank at 2.5e5 cells/rank "
+                   f"(paper: ~{PAPER_MSGS_PER_RANK})",
+    }, {
+        "name": "comm_stats/boundary_msgs_per_cell",
+        "us_per_call": "",
+        "derived": f"{boundary_msgs_per_cell:.3f}",
+    }]
+    emit(rows, "comm_stats")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows: List[Dict], name: str) -> None:
+    """Print CSV rows (``name,us_per_call,derived``) and save JSON."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    for r in rows:
+        us = r.get("us_per_call", "")
+        derived = r.get("derived", "")
+        print(f"{r['name']},{us},{derived}", flush=True)
+
+
+def build_clustered_taskgraph(n_particles=4096, seed=0, *, base_side=6,
+                              threshold=48, rate=2e-9):
+    """Clustered-IC task graph over the §3.1-refined (split) cell set.
+
+    Costs are seconds (``rate`` s/interaction — the measured-cost
+    calibration of §3.2, ≈CPU pair-interaction throughput). Returns
+    (task graph, n_leaves, per-leaf occupancy).
+    """
+    from repro.core import TaskGraph
+    from repro.sph import clustered_ic
+    from repro.sph.adaptive import refined_cell_graph
+    import numpy as np
+
+    ic = clustered_ic(n_particles, seed=seed)
+    node_w, edges, leaves = refined_cell_graph(
+        ic["pos"], ic["box"], base_side, threshold=threshold, max_levels=5)
+    n_ngb = 48.0
+    g = TaskGraph()
+    occ = np.array([l.occupancy for l in leaves], dtype=np.int64)
+
+    def self_cost(o):
+        return rate * min(0.5 * o * o, n_ngb * o)
+
+    def pair_cost(a, b):
+        return rate * min(a * b, n_ngb * min(a, b))
+
+    sort = [g.add_task("sort", resources=(c,), writes=(c,),
+                       cost=max(rate * 2 * occ[c], 1e-9))
+            for c in range(len(leaves))]
+    ghost = [g.add_task("ghost", resources=(c,), writes=(c,),
+                        cost=max(rate * occ[c], 1e-9))
+             for c in range(len(leaves))]
+    kick = [g.add_task("kick", resources=(c,), writes=(c,),
+                       cost=max(rate * occ[c], 1e-9))
+            for c in range(len(leaves))]
+    for c in range(len(leaves)):
+        d = g.add_task("density_self", resources=(c,), writes=(c,),
+                       cost=max(self_cost(occ[c]), 1e-9))
+        f = g.add_task("force_self", resources=(c,), writes=(c,),
+                       cost=max(self_cost(occ[c]), 1e-9))
+        g.add_dependency(d, sort[c])
+        g.add_dependency(ghost[c], d)
+        g.add_dependency(f, ghost[c])
+        g.add_dependency(kick[c], f)
+    for (a, b), _w in edges.items():
+        d = g.add_task("density_pair", resources=(a, b), writes=(a, b),
+                       cost=max(pair_cost(occ[a], occ[b]), 1e-9))
+        f = g.add_task("force_pair", resources=(a, b), writes=(a, b),
+                       cost=max(pair_cost(occ[a], occ[b]), 1e-9))
+        for c in (a, b):
+            g.add_dependency(d, sort[c])
+            g.add_dependency(ghost[c], d)
+            g.add_dependency(f, ghost[c])
+            g.add_dependency(kick[c], f)
+    return g, len(leaves), occ

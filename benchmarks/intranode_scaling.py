@@ -1,0 +1,38 @@
+"""Threads-per-node scaling (paper Fig. 7).
+
+The paper fixes 512 nodes and sweeps threads/rank, showing the hybrid
+(task-based) component scales to all hardware threads. Analogue: fixed
+4-rank decomposition of the clustered task graph, threads ∈ {1 … 32}.
+"""
+
+from __future__ import annotations
+
+from repro.core import AsyncExecutorSim, decompose_with_comm
+from .common import build_clustered_taskgraph, emit
+from .strong_scaling import PHASES
+
+
+def run(n_particles=12000, ranks=4, threads_list=(1, 2, 4, 8, 16, 32)):
+    g, ncells, occupancy = build_clustered_taskgraph(n_particles)
+    cell_bytes = [float(max(o, 1)) * 64.0 for o in occupancy]
+    dist, _ = decompose_with_comm(g, ncells, ranks,
+                                  cell_bytes=cell_bytes, phases=PHASES)
+    rows = []
+    t1 = None
+    for th in threads_list:
+        m = AsyncExecutorSim(dist, ranks=ranks, threads=th,
+                             latency=1.5e-6, bandwidth=5e9).run()
+        if t1 is None:
+            t1 = m.makespan
+        eff = t1 / (m.makespan * th)
+        rows.append({
+            "name": f"intranode/threads{th}",
+            "us_per_call": round(m.makespan * 1e6, 1),
+            "derived": f"efficiency={min(eff, 1.0):.3f}",
+        })
+    emit(rows, "intranode_scaling")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp reference.
+
+NOTE: this container executes Pallas in interpret mode (Python), so
+wall-times here validate *plumbing*, not TPU performance — TPU-side perf is
+assessed structurally in §Roofline from the lowered artifacts. The jnp
+reference timing is the honest CPU number.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.mamba_scan import selective_scan, selective_scan_ref
+from .common import emit, timeit
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # flash attention, decode-ish block
+    B, S, H, hd = 1, 512, 4, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+    ref_fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    t_ref = timeit(ref_fn, q, k, v, repeats=3)
+    pal_fn = jax.jit(lambda q, k, v: flash_attention(
+        q, k, v, causal=True, block_q=128, block_k=128, interpret=True))
+    t_pal = timeit(pal_fn, q, k, v, repeats=3)
+    rows.append({"name": "kernels/attention_ref_jnp",
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "derived": f"B{B} S{S} H{H} hd{hd}"})
+    rows.append({"name": "kernels/flash_attention_interpret",
+                 "us_per_call": round(t_pal * 1e6, 1),
+                 "derived": "interpret-mode (correctness harness)"})
+
+    # mamba scan
+    B, S, dI, N = 1, 256, 64, 16
+    u = jnp.asarray(rng.standard_normal((B, S, dI)).astype(np.float32))
+    dt = jnp.asarray(0.1 * rng.random((B, S, dI)).astype(np.float32))
+    A = jnp.asarray(-rng.random((dI, N)).astype(np.float32) - 0.1)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32))
+    D = jnp.asarray(rng.random(dI).astype(np.float32))
+    ref2 = jax.jit(lambda *a: selective_scan_ref(*a))
+    t_ref2 = timeit(ref2, u, dt, A, Bm, Cm, D, repeats=3)
+    pal2 = jax.jit(lambda *a: selective_scan(*a, block_d=32,
+                                             interpret=True))
+    t_pal2 = timeit(pal2, u, dt, A, Bm, Cm, D, repeats=3)
+    rows.append({"name": "kernels/mamba_scan_ref_jnp",
+                 "us_per_call": round(t_ref2 * 1e6, 1),
+                 "derived": f"B{B} S{S} dI{dI} N{N}"})
+    rows.append({"name": "kernels/mamba_scan_interpret",
+                 "us_per_call": round(t_pal2 * 1e6, 1),
+                 "derived": "interpret-mode (correctness harness)"})
+
+    emit(rows, "kernels_bench")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

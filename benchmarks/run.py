@@ -1,0 +1,40 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows; JSON copies land in benchmarks/results/.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (baseline_compare, comm_stats, intranode_scaling,
+                   kernels_bench, partition_quality, strong_scaling)
+
+    print("name,us_per_call,derived")
+    modules = [
+        ("strong_scaling (Figs 5/6/8)", strong_scaling.run),
+        ("intranode_scaling (Fig 7)", intranode_scaling.run),
+        ("comm_stats (§5 messages)", comm_stats.run),
+        ("partition_quality (Fig 4)", partition_quality.run),
+        ("baseline_compare (§5 GADGET-2)", baseline_compare.run),
+        ("kernels_bench", kernels_bench.run),
+    ]
+    failures = []
+    for label, fn in modules:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:
+            failures.append((label, e))
+            print(f"{label},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+        else:
+            print(f"# {label} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .hlo_parse import CollectiveOp, collective_summary, parse_collectives
+from .roofline import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, Roofline,
+                       model_flops, remat_overhead)
+
+__all__ = [
+    "CollectiveOp", "collective_summary", "parse_collectives",
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16", "Roofline", "model_flops",
+    "remat_overhead",
+]

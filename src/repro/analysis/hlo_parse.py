@@ -1,0 +1,113 @@
+"""Parse collective traffic out of optimized (post-SPMD) HLO text.
+
+``compiled.as_text()`` on a partitioned executable names every collective
+explicitly (`all-reduce`, `all-gather`, `reduce-scatter`, `all-to-all`,
+`collective-permute`, async `-start` variants). Shapes in the text are
+*per-device* (local shard) shapes, so summed bytes here are per-device
+quantities — exactly what the roofline's per-chip terms need.
+
+Per-op traffic model (ring algorithms, group size N):
+    all-reduce          2·(N−1)/N · bytes(result)
+    all-gather          (N−1)/N · bytes(result)
+    reduce-scatter      (N−1)   · bytes(result)      (input = N·result)
+    all-to-all          (N−1)/N · bytes(result)
+    collective-permute  bytes(result)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    op: str
+    bytes_result: float
+    group_size: int
+    traffic: float
+    line: str
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _traffic(op: str, nbytes: float, n: int) -> float:
+    if n <= 1 and op != "collective-permute":
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * nbytes
+    if op == "all-gather":
+        return (n - 1) / n * nbytes
+    if op == "reduce-scatter":
+        return (n - 1) * nbytes
+    if op == "all-to-all":
+        return (n - 1) / n * nbytes
+    return nbytes                      # collective-permute
+
+
+def parse_collectives(hlo_text: str, *, default_group: int = 1
+                      ) -> List[CollectiveOp]:
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shape"))
+        n = _group_size(line, default_group)
+        out.append(CollectiveOp(op=op, bytes_result=nbytes, group_size=n,
+                                traffic=_traffic(op, nbytes, n),
+                                line=line.strip()[:200]))
+    return out
+
+
+def collective_summary(hlo_text: str, *, default_group: int = 1
+                       ) -> Dict[str, float]:
+    ops = parse_collectives(hlo_text, default_group=default_group)
+    by_kind: Dict[str, float] = {}
+    for o in ops:
+        by_kind[o.op] = by_kind.get(o.op, 0.0) + o.traffic
+    return {
+        "count": float(len(ops)),
+        "traffic_bytes": sum(o.traffic for o in ops),
+        **{f"bytes_{k}": v for k, v in sorted(by_kind.items())},
+    }

@@ -1,0 +1,17 @@
+"""mixtral-8x7b — MoE 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv=8, head_dim=128,
+    d_ff=14336, vocab=32000,
+    n_experts=8, top_k=2, window=4096,
+)
+
+REDUCED = ModelConfig(
+    name="mixtral-8x7b-reduced", family="moe",
+    n_layers=4, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+    d_ff=128, vocab=512, n_experts=4, top_k=2, window=64,
+    capacity_factor=8.0,
+)

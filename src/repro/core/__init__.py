@@ -1,0 +1,32 @@
+"""SWIFT's three contributions as a composable library.
+
+C1: task-based parallelism  -> taskgraph, scheduler
+C2: graph-partition domain decomposition -> partition, decompose
+C3: fully asynchronous communication -> comm_planner (+ distributed/overlap)
+"""
+
+from .taskgraph import Task, TaskGraph, TaskGraphError
+from .scheduler import (AsyncExecutorSim, SimResult, balance_wave,
+                        makespan_lower_bound, wave_schedule)
+from .partition import (Graph, PartitionResult, evaluate, partition_geometric,
+                        partition_graph)
+from .cost_model import (CostModel, LayerCost, attention_cost, mamba_cost,
+                         mlp_cost, moe_cost, model_flops_2nd, model_flops_6nd)
+from .comm_planner import (CommStats, HaloPlan, insert_comm_tasks,
+                           pairwise_stats_from_partition, plan_halo_1d)
+from .decompose import (Decomposition, assign_tasks, decompose_cells,
+                        decompose_layers, decompose_with_comm)
+
+__all__ = [
+    "Task", "TaskGraph", "TaskGraphError",
+    "AsyncExecutorSim", "SimResult", "balance_wave", "makespan_lower_bound",
+    "wave_schedule",
+    "Graph", "PartitionResult", "evaluate", "partition_geometric",
+    "partition_graph",
+    "CostModel", "LayerCost", "attention_cost", "mamba_cost", "mlp_cost",
+    "moe_cost", "model_flops_2nd", "model_flops_6nd",
+    "CommStats", "HaloPlan", "insert_comm_tasks",
+    "pairwise_stats_from_partition", "plan_halo_1d",
+    "Decomposition", "assign_tasks", "decompose_cells", "decompose_layers",
+    "decompose_with_comm",
+]

@@ -1,0 +1,141 @@
+"""Task cost model: analytic first, measured after (SWIFT §3.2).
+
+    "The cost of each task is initially approximated via the asymptotic cost
+    of the task type and the number of particles involved. After a task has
+    been executed, its effective computational cost is computed and used."
+
+Two clients:
+
+* the SPH engine — per-task-type asymptotic costs in "interactions" units,
+  refined by an exponential moving average of measured per-type rates;
+* the LM stack — per-layer analytic FLOPs/bytes, refined by
+  ``compiled.cost_analysis()`` from the dry-run (see ``analysis/roofline.py``).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+
+# Asymptotic per-type cost exponents for SPH tasks: a self task over a cell of
+# N particles does ~N^2/2 pair checks; a pair task over (N, M) does ~N*M.
+_SPH_ASYMPTOTIC: Dict[str, Callable[..., float]] = {
+    "sort": lambda n, m=0: n * max(math.log2(max(n, 2)), 1.0),
+    "density_self": lambda n, m=0: 0.5 * n * n,
+    "density_pair": lambda n, m: n * m,
+    "ghost": lambda n, m=0: n,
+    "force_self": lambda n, m=0: 0.5 * n * n,
+    "force_pair": lambda n, m: n * m,
+    "kick": lambda n, m=0: n,
+    "send": lambda n, m=0: n,
+    "recv": lambda n, m=0: n,
+}
+
+
+@dataclass
+class CostModel:
+    """Per-task-type cost = rate[type] * asymptotic(type, sizes).
+
+    ``update`` folds in a measured execution time with an EMA — the paper's
+    measured-cost refinement. Rates are in seconds per asymptotic unit.
+    """
+
+    rates: Dict[str, float] = field(default_factory=dict)
+    ema: float = 0.3
+    default_rate: float = 1e-9
+    asymptotic: Dict[str, Callable[..., float]] = field(
+        default_factory=lambda: dict(_SPH_ASYMPTOTIC))
+
+    def units(self, kind: str, n: int, m: int = 0) -> float:
+        fn = self.asymptotic.get(kind)
+        if fn is None:
+            return float(max(n, 1))
+        return float(fn(n, m))
+
+    def cost(self, kind: str, n: int, m: int = 0) -> float:
+        return self.rates.get(kind, self.default_rate) * self.units(kind, n, m)
+
+    def update(self, kind: str, n: int, m: int, measured_seconds: float) -> None:
+        u = self.units(kind, n, m)
+        if u <= 0 or measured_seconds <= 0:
+            return
+        rate = measured_seconds / u
+        old = self.rates.get(kind)
+        self.rates[kind] = rate if old is None else (
+            (1 - self.ema) * old + self.ema * rate)
+
+
+# --------------------------------------------------------------- LM analytic
+@dataclass(frozen=True)
+class LayerCost:
+    flops: float
+    param_bytes: float
+    act_bytes: float
+
+    @property
+    def total_bytes(self) -> float:
+        return self.param_bytes + self.act_bytes
+
+
+def attention_cost(*, batch: int, q_len: int, kv_len: int, d_model: int,
+                   n_heads: int, n_kv: int, head_dim: int,
+                   dtype_bytes: int = 2, causal: bool = True,
+                   window: Optional[int] = None) -> LayerCost:
+    """Analytic attention FLOPs/bytes (projections + scores + output)."""
+    d_q = n_heads * head_dim
+    d_kv = n_kv * head_dim
+    proj = 2 * batch * q_len * d_model * (d_q + 2 * d_kv)      # qkv
+    proj += 2 * batch * q_len * d_q * d_model                  # out proj
+    kv_eff = kv_len
+    if window is not None:
+        kv_eff = min(kv_len, window)
+    score_frac = 0.5 if (causal and q_len == kv_len and window is None) else 1.0
+    scores = 2 * batch * n_heads * q_len * kv_eff * head_dim * 2 * score_frac
+    params = (d_model * (d_q + 2 * d_kv) + d_q * d_model) * dtype_bytes
+    acts = batch * q_len * (d_model + d_q + 2 * d_kv) * dtype_bytes
+    acts += batch * n_heads * q_len * min(kv_eff, 4096) * dtype_bytes  # tile-resident scores
+    return LayerCost(proj + scores, float(params), float(acts))
+
+
+def mlp_cost(*, batch: int, seq: int, d_model: int, d_ff: int,
+             gated: bool = True, dtype_bytes: int = 2) -> LayerCost:
+    mats = 3 if gated else 2
+    flops = 2 * batch * seq * d_model * d_ff * mats
+    params = mats * d_model * d_ff * dtype_bytes
+    acts = batch * seq * (d_model + d_ff * (2 if gated else 1)) * dtype_bytes
+    return LayerCost(float(flops), float(params), float(acts))
+
+
+def moe_cost(*, batch: int, seq: int, d_model: int, d_ff: int,
+             num_experts: int, top_k: int, dtype_bytes: int = 2) -> LayerCost:
+    dense = mlp_cost(batch=batch, seq=seq, d_model=d_model, d_ff=d_ff,
+                     gated=True, dtype_bytes=dtype_bytes)
+    router = 2 * batch * seq * d_model * num_experts
+    return LayerCost(dense.flops * top_k + router,
+                     dense.param_bytes * num_experts,
+                     dense.act_bytes * top_k)
+
+
+def mamba_cost(*, batch: int, seq: int, d_model: int, d_state: int,
+               expand: int = 2, d_conv: int = 4,
+               dtype_bytes: int = 2) -> LayerCost:
+    d_inner = expand * d_model
+    flops = 2 * batch * seq * d_model * d_inner * 2          # in_proj (x, z)
+    flops += 2 * batch * seq * d_inner * d_conv              # conv1d
+    flops += 6 * batch * seq * d_inner * d_state             # selective scan
+    flops += 2 * batch * seq * d_inner * d_model             # out_proj
+    params = (d_model * d_inner * 3 + d_inner * d_state * 2) * dtype_bytes
+    acts = batch * seq * (d_model + 3 * d_inner) * dtype_bytes
+    return LayerCost(float(flops), float(params), float(acts))
+
+
+def model_flops_6nd(n_params: float, n_tokens: float) -> float:
+    """MODEL_FLOPS = 6·N·D for a training step (fwd+bwd)."""
+    return 6.0 * n_params * n_tokens
+
+
+def model_flops_2nd(n_params: float, n_tokens: float) -> float:
+    """Inference (fwd only): 2·N·D."""
+    return 2.0 * n_params * n_tokens

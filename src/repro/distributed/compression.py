@@ -1,0 +1,102 @@
+"""Gradient compression for data-parallel all-reduce (distributed-opt trick).
+
+Two schemes with **error feedback** (residual carried to the next step so
+compression error doesn't bias the optimizer — Karimireddy et al. 2019):
+
+* int8 quantisation — per-tensor symmetric scale; 4× traffic reduction.
+* top-k sparsification — keep the k largest-|g| entries; (1-k/n)× reduction.
+
+``compress_grads``/``decompress_grads`` wrap a grad pytree; the train loop
+applies them around the DP all-reduce when ``TrainConfig.compression`` is
+set. Numerical contract (tested): with error feedback the *running sum* of
+decompressed gradients tracks the running sum of true gradients.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: Any           # pytree like grads (f32)
+
+
+def init_compress_state(grads) -> CompressState:
+    return CompressState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _quantize_int8(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(x, frac: float):
+    n = x.size
+    k = max(int(n * frac), 1)
+    flat = jnp.abs(x).reshape(-1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(jnp.float32)
+
+
+def compress_grads(grads, state: CompressState, *, scheme: str = "int8",
+                   topk_frac: float = 0.1):
+    """Returns (compressed payload pytree, new residual state).
+
+    The payload is what would cross the network; ``decompress_grads``
+    reconstructs the dense gradient.
+    """
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        if scheme == "int8":
+            q, scale = _quantize_int8(x)
+            approx = _dequantize_int8(q, scale)
+            return (q, scale), x - approx
+        if scheme == "topk":
+            mask = _topk_mask(x, topk_frac)
+            kept = x * mask
+            return (kept, jnp.zeros((), jnp.float32)), x - kept
+        raise ValueError(scheme)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    payloads, residuals = [], []
+    for g, r in zip(flat_g, flat_r):
+        p, res = one(g, r)
+        payloads.append(p)
+        residuals.append(res)
+    return (tdef.unflatten(payloads),
+            CompressState(tdef.unflatten(residuals)))
+
+
+def decompress_grads(payload, *, scheme: str = "int8"):
+    def one(p):
+        if scheme == "int8":
+            q, scale = p
+            return _dequantize_int8(q, scale)
+        kept, _ = p
+        return kept
+
+    return jax.tree.map(one, payload,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and not isinstance(x[0], tuple))
+
+
+def compressed_bytes(payload, *, scheme: str = "int8") -> int:
+    total = 0
+    for leaf in jax.tree.leaves(payload):
+        if scheme == "int8" and leaf.dtype == jnp.int8:
+            total += leaf.size
+        elif scheme == "topk":
+            total += int(leaf.size * 4)      # value+index stream estimate
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,199 @@
+"""Per-architecture sharding rules for the production mesh.
+
+Train (``mode="train"``): 2-D weight sharding — tensor parallelism over
+``model`` on the output-feature dim and FSDP/ZeRO-3-style sharding over
+``pod``+``data`` on the input-feature dim; optimizer moments inherit the
+parameter specs (ZeRO-1 falls out for free). Activations are constrained to
+batch-over-data at block boundaries.
+
+Serve (``mode="serve"``): TP over ``model`` only (weights replicated across
+the batch axes) except MoE expert FFNs, which shard their hidden dim over
+(data×model) so mixtral-8x22b's 282 GB of bf16 experts fit the pod. KV
+caches shard batch→data and sequence→model (split-KV decoding: softmax over
+a sharded KV length lowers to partial reductions + an all-reduce, which is
+exactly flash-decoding's math); ``long_500k`` (batch=1) shards the 500k KV
+over all axes.
+
+Every spec is built with :func:`valid_spec`, so indivisible dims degrade to
+replication instead of failing to lower — e.g. qwen's 40 KV heads on a
+16-way model axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from .mesh_utils import batch_pref, data_axes, valid_spec
+
+FSDP = ("data",)        # input-feature sharding axes (train)
+TP = ("model",)         # output-feature sharding axes
+
+
+def _leaf_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh,
+               mode: str, moe_ep: bool = False) -> P:
+    """Sharding rule for one parameter leaf, dispatched on its path/name."""
+    shape = leaf.shape
+    nd = len(shape)
+    train = mode == "train"
+    fsdp = ["data"] if train else []
+    fsdp_pod = [("pod", "data"), "data"] if train else []
+
+    def spec(prefs):
+        return valid_spec(shape, prefs, mesh)
+
+    def stacked(prefs):
+        """Leading repeat/stack dims replicated, trailing dims per prefs."""
+        return spec([[]] * (nd - len(prefs)) + prefs)
+
+    name = path.split("/")[-1]
+
+    if name in ("embed",):
+        return spec([["model"], fsdp_pod])
+    if name in ("head",):
+        return spec([fsdp_pod, ["model"]])
+    if name.startswith("ln") or name in ("q_norm", "k_norm", "norm",
+                                         "enc_ln_f", "dt_bias", "A_log",
+                                         "D", "conv_b", "b_norm", "c_norm",
+                                         "dt_norm"):
+        if cfg.ssm == "mamba1" and name in ("conv_b", "dt_bias", "A_log",
+                                            "D") and "mix" in path:
+            # mamba1 d_inner-TP: these carry a d_inner dim
+            if name == "A_log":
+                return stacked([["model"], []])
+            return stacked([["model"]])
+        return P()
+    if name in ("wq", "wk", "wv"):
+        return stacked([fsdp_pod, ["model"]])
+    if name in ("bq", "bk", "bv"):
+        return stacked([["model"]])
+    if name == "wo" and "attn" in path or name == "wo" and "xattn" in path:
+        return stacked([["model"], fsdp_pod])
+    if name in ("wi", "wg"):
+        if "ffn" in path and cfg.n_experts and "segments" in path:
+            # MoE experts (…, E, d, ff)
+            if moe_ep:
+                # expert parallelism: experts over model, FFN local
+                return stacked([["model"], fsdp_pod, []])
+            ff_pref = [("data", "model"), "model"] if not train \
+                else ["model"]
+            return stacked([[], fsdp_pod, ff_pref])
+        return stacked([fsdp_pod, ["model"]])
+    if name == "wo":
+        if "ffn" in path and cfg.n_experts and "segments" in path:
+            if moe_ep:
+                return stacked([["model"], [], fsdp_pod])
+            ff_pref = [("data", "model"), "model"] if not train \
+                else ["model"]
+            return stacked([[], ff_pref, fsdp_pod])
+        return stacked([["model"], fsdp_pod])
+    if name == "router":
+        return stacked([fsdp_pod, []])
+    if name == "out":                       # zamba2 shared out (2d, d)
+        return stacked([fsdp_pod, []])
+    if name == "lora_a":
+        return stacked([fsdp_pod, []])
+    if name == "lora_b":
+        return stacked([[], fsdp_pod])
+    if name == "in_proj":
+        if cfg.ssm == "mamba1":
+            return stacked([fsdp_pod, ["model"]])
+        return stacked([fsdp_pod, []])      # mamba2: mixed outputs
+    if name == "out_proj":
+        if cfg.ssm == "mamba1":
+            return stacked([["model"], fsdp_pod])
+        return stacked([[], fsdp_pod])
+    if name == "conv_w":
+        if cfg.ssm == "mamba1":
+            return stacked([[], ["model"]])
+        return P()
+    if name == "x_proj":
+        return stacked([["model"], []])
+    if name == "dt_proj":
+        return stacked([[], ["model"]])
+    return P()
+
+
+def _tree_with_paths(tree, fn, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _tree_with_paths(v, fn, f"{prefix}/{k}") for k, v in
+                tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [_tree_with_paths(v, fn, f"{prefix}/{i}")
+               for i, v in enumerate(tree)]
+        return type(tree)(out) if not hasattr(tree, "_fields") \
+            else type(tree)(*out)
+    return fn(prefix, tree)
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    cfg: ModelConfig
+    mode: str = "train"            # train | serve
+    moe_ep: bool = False           # experts → model axis (EP) instead of TP
+
+    # ------------------------------------------------------------- params
+    def params_pspec(self, params):
+        return _tree_with_paths(
+            params, lambda p, l: _leaf_spec(p, l, self.cfg, self.mesh,
+                                            self.mode, self.moe_ep))
+
+    def params_sharding(self, params):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.params_pspec(params),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # -------------------------------------------------------------- data
+    def tokens_pspec(self, batch: int):
+        bp = batch_pref(self.mesh)
+        return valid_spec((batch, 1), [bp, []], self.mesh)
+
+    def act_pspec(self, batch: int):
+        bp = batch_pref(self.mesh)
+        return valid_spec((batch, 1, 1), [bp, [], []], self.mesh)
+
+    def constrain(self, x, kind=None):
+        """Activation constraint at block boundaries."""
+        if x.ndim >= 2:
+            spec = self.act_pspec(x.shape[0])
+            spec = P(*(list(spec) + [None] * (x.ndim - len(spec))))
+            return jax.lax.with_sharding_constraint(x, spec)
+        return x
+
+    # ------------------------------------------------------------- caches
+    def cache_leaf_spec(self, path: str, leaf):
+        """KV: batch→data, length→model (split-KV); batch=1 (long_500k)
+        spreads the KV length over every axis. Mamba states: channel/head
+        dim→model. Works for both stacked (R, …) and per-layer layouts."""
+        shape = leaf.shape
+        nd = len(shape)
+        bp = batch_pref(self.mesh)
+        if nd == 5:          # stacked KV (R,B,S,K,hd) / mamba2 ssm stacked
+            seq_pref = ["model"] if shape[1] > 1 else \
+                [("data", "model"), "model", "data"]
+            return valid_spec(shape, [[], bp, seq_pref, [], []], self.mesh)
+        if nd == 4:          # per-layer KV (B,S,K,hd) / mamba2 ssm (B,H,p,N)
+            seq_pref = ["model"] if shape[0] > 1 else \
+                [("data", "model"), "model", "data"]
+            return valid_spec(shape, [bp, seq_pref, ["model"], []],
+                              self.mesh)
+        if nd == 3:          # mamba1 ssm (B,dI,N) / conv (B,K-1,dI)
+            return valid_spec(shape, [bp, ["model"], ["model"]], self.mesh)
+        return P()
+
+    def caches_pspec(self, caches):
+        return _tree_with_paths(
+            caches, lambda p, l: self.cache_leaf_spec(p, l)
+            if hasattr(l, "shape") and l.ndim > 0 else P())
+
+    # ---------------------------------------------------------- optimizer
+    def opt_pspec(self, params):
+        from ..train.optimizer import AdamState
+        pp = self.params_pspec(params)
+        return AdamState(step=P(), mu=pp, nu=pp)

@@ -1,0 +1,103 @@
+"""Flash attention (online softmax) Pallas TPU kernel.
+
+Grid: (batch, q_head, q_blocks). Each program owns one (Bq × hd) query tile
+in VMEM and streams KV in (Bk × hd) tiles with the online-softmax
+rescaling recurrence (running max m, normaliser l, accumulator acc), so the
+(S × T) score matrix never exists — per-program VMEM is
+O(Bq·hd + Bk·hd + Bq·Bk).
+
+Structure notes (TPU):
+* q tile × k tileᵀ is an MXU matmul (hd = contraction dim, multiple of 128
+  in the production configs); rescale/exp are VPU ops.
+* Causal + sliding-window masking is positional arithmetic on block
+  offsets; fully-masked KV tiles are skipped by clamping the streamed
+  range (`lo`, `hi`) — the paper's "don't compute what the mask kills".
+* GQA: the kv-head index map collapses G consecutive q heads onto one KV
+  head, so no KV duplication is materialised.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool,
+                  window: Optional[int], block_k: int, q_len: int,
+                  kv_len: int):
+    qb = q_ref[0, :, 0, :]                       # (Bq, hd)
+    Bq, hd = qb.shape
+    scale = 1.0 / math.sqrt(hd)
+    iq = pl.program_id(2)
+    q0 = iq * Bq + (kv_len - q_len)              # global key-offset of row 0
+
+    nk = kv_len // block_k
+    # streamed kv range: skip tiles that are fully masked
+    hi = nk
+    if causal:
+        hi = jnp.minimum(nk, (q0 + Bq - 1) // block_k + 1)
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum(0, (q0 - window + 1) // block_k)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kb = k_ref[0, pl.ds(j * block_k, block_k), 0, :]   # (Bk, hd)
+        vb = v_ref[0, pl.ds(j * block_k, block_k), 0, :]
+        s = jnp.dot(qb, kb.T,
+                    preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
+        qpos = q0 + jnp.arange(Bq)[:, None]
+        kpos = j * block_k + jnp.arange(block_k)[None, :]
+        ok = jnp.ones((Bq, block_k), bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p.astype(vb.dtype), vb, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((Bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Bq,), jnp.float32)
+    acc0 = jnp.zeros((Bq, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q (B, S, H, hd); k/v (B, T, K, hd), H = K·G. → (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, "seq lens must tile"
+
+    grid = (B, H, S // bq)
+    q_spec = pl.BlockSpec((1, bq, 1, hd), lambda b, h, i: (b, i, h, 0))
+    kv_spec = pl.BlockSpec((1, T, 1, hd), lambda b, h, i: (b, 0, h // G, 0))
+    o_spec = pl.BlockSpec((1, bq, 1, hd), lambda b, h, i: (b, i, h, 0))
+    fn = functools.partial(_flash_kernel, causal=causal, window=window,
+                           block_k=bk, q_len=S, kv_len=T)
+    return pl.pallas_call(
+        fn, grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = True):
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)

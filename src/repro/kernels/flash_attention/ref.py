@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Materialises the full (S, T) score matrix — the thing the Pallas kernel
+exists to avoid — with causal + sliding-window masking and GQA head
+grouping. Ground truth for tests/test_kernel_flash_attention.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None):
+    """q (B, S, H, hd); k/v (B, T, K, hd) with H = K·G. → (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(T)
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None] + (T - S)
+    if window is not None:
+        ok &= kpos[None, :] > qpos[:, None] + (T - S) - window
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v)
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,7 @@
+"""Selective-scan kernel (Mamba-1, VMEM-resident state)."""
+
+from .kernel import selective_scan
+from .ops import selective_scan_op
+from .ref import selective_scan_ref
+
+__all__ = ["selective_scan", "selective_scan_op", "selective_scan_ref"]

@@ -1,0 +1,77 @@
+"""Selective-scan (Mamba-1) Pallas TPU kernel.
+
+Hardware adaptation of the CUDA selective-scan (DESIGN.md §8): the CUDA
+kernel streams time through SRAM keeping (d_inner, d_state) state resident;
+here each program owns a (channel-block × d_state) state tile in VMEM and
+scans the full sequence for its (batch, channel-block) grid cell:
+
+  grid = (B, d_inner // block_d)
+  VMEM per program: u/dt (S, block_d), B/C (S, N), state (block_d, N),
+                    y (S, block_d) — ~1.6 MB at S=1024, block_d=128, N=16.
+
+The channel dimension is embarrassingly parallel for Mamba-1's diagonal A
+(this is also why d_inner tensor-parallelism is clean — the same split,
+across chips instead of across programs). Time stays sequential inside the
+program (`lax.scan`), which is the honest dependency structure; HBM traffic
+is one read of the inputs and one write of y — the (S, d_inner, d_state)
+intermediate that a naive XLA lowering would materialise never leaves VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
+                 y_ref, hout_ref):
+    u = u_ref[0].astype(jnp.float32)          # (S, dblk)
+    dt = dt_ref[0].astype(jnp.float32)        # (S, dblk)
+    A = A_ref[...].astype(jnp.float32)        # (dblk, N)
+    Bm = B_ref[0].astype(jnp.float32)         # (S, N)
+    Cm = C_ref[0].astype(jnp.float32)         # (S, N)
+    D = D_ref[...].astype(jnp.float32)        # (dblk,)
+    h = h0_ref[0].astype(jnp.float32)         # (dblk, N)
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp                 # (dblk,),(dblk,),(N,),(N,)
+        dA = jnp.exp(dtt[:, None] * A)        # (dblk, N)
+        h = dA * h + (dtt * ut)[:, None] * bt[None, :]
+        y = h @ ct                            # (dblk,)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, (u, dt, Bm, Cm))
+    y_ref[0] = (ys + u * D[None, :]).astype(y_ref.dtype)
+    hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def selective_scan(u, dt, A, Bm, Cm, D, *, h0=None, block_d: int = 128,
+                   interpret: bool = True):
+    """u/dt (B, S, dI); A (dI, N); Bm/Cm (B, S, N); D (dI,).
+
+    Returns (y (B, S, dI), h_final (B, dI, N)).
+    """
+    B_, S, dI = u.shape
+    N = A.shape[1]
+    bd = min(block_d, dI)
+    assert dI % bd == 0, "d_inner must tile by block_d"
+    if h0 is None:
+        h0 = jnp.zeros((B_, dI, N), jnp.float32)
+
+    grid = (B_, dI // bd)
+    sd = pl.BlockSpec((1, S, bd), lambda b, j: (b, 0, j))
+    sn = pl.BlockSpec((1, S, N), lambda b, j: (b, 0, 0))
+    sA = pl.BlockSpec((bd, N), lambda b, j: (j, 0))
+    sD = pl.BlockSpec((bd,), lambda b, j: (j,))
+    sh = pl.BlockSpec((1, bd, N), lambda b, j: (b, j, 0))
+    return pl.pallas_call(
+        _scan_kernel, grid=grid,
+        in_specs=[sd, sd, sA, sn, sn, sD, sh],
+        out_specs=[sd, sh],
+        out_shape=[jax.ShapeDtypeStruct((B_, S, dI), u.dtype),
+                   jax.ShapeDtypeStruct((B_, dI, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, Bm, Cm, D, h0)

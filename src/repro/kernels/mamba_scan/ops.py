@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the selective-scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import selective_scan
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def selective_scan_op(u, dt, A, Bm, Cm, D, *, block_d: int = 128,
+                      interpret: bool = True):
+    return selective_scan(u, dt, A, Bm, Cm, D, block_d=block_d,
+                          interpret=interpret)

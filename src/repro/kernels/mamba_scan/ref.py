@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the selective-scan kernel.
+
+Sequential ``lax.scan`` over time at the (B, d_inner, d_state) level —
+the mathematically transparent form of Mamba-1's recurrence:
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t−1} + (Δ_t u_t) ⊗ B_t
+    y_t = ⟨h_t, C_t⟩ + D ⊙ u_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, A, Bm, Cm, D, *, h0=None):
+    """u/dt (B, S, dI); A (dI, N); Bm/Cm (B, S, N); D (dI,).
+
+    Returns (y (B, S, dI), h_final (B, dI, N)). All math in f32.
+    """
+    B_, S, dI = u.shape
+    N = A.shape[1]
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    h = jnp.zeros((B_, dI, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp
+        dA = jnp.exp(dtt[:, :, None] * A[None])
+        h = dA * h + (dtt * ut)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h,
+        (uf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+         Bm.astype(jnp.float32).transpose(1, 0, 2),
+         Cm.astype(jnp.float32).transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) + uf * D[None, None, :]
+    return y, h

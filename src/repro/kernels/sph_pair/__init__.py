@@ -1,0 +1,5 @@
+"""SPH cell-pair interaction kernels (Pallas TPU + jnp oracle)."""
+
+from . import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the sph_pair Pallas kernels.
+
+Computes exactly what ``kernel.py`` computes — both directions of every
+cell-pair interaction — by calling the physics blocks twice. Used by the
+kernel tests (``tests/test_kernel_sph_pair.py``) and as the fallback path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...sph.physics import density_block, force_block
+
+
+def density_pair_ref(pos_i, h_i, m_i, mask_i, pos_j, h_j, m_j, mask_j,
+                     *, kernel: str = "cubic"):
+    """Both directions of the density interaction for batched pairs.
+
+    All inputs carry a leading pairs dimension P; positions are (P, C, 3)
+    with pos_j already image-shifted. Returns
+    (rho_i, drho_i, nngb_i, rho_j, drho_j, nngb_j), each (P, C).
+    """
+    dens = functools.partial(density_block, kernel=kernel)
+    dij = jax.vmap(dens)(pos_i, h_i, pos_j, m_j, mask_j)
+    dji = jax.vmap(dens)(pos_j, h_j, pos_i, m_i, mask_i)
+    return (dij.rho, dij.drho_dh, dij.nngb,
+            dji.rho, dji.drho_dh, dji.nngb)
+
+
+def force_pair_ref(pos_i, vel_i, h_i, P_i, rho_i, omega_i, cs_i, m_i, mask_i,
+                   pos_j, vel_j, h_j, P_j, rho_j, omega_j, cs_j, m_j, mask_j,
+                   *, kernel: str = "cubic", alpha_visc: float = 0.0):
+    """Both directions of the force interaction for batched pairs.
+
+    Returns (dv_i, du_i, dv_j, du_j): (P, C, 3), (P, C), (P, C, 3), (P, C).
+    """
+    force = functools.partial(force_block, kernel=kernel,
+                              alpha_visc=alpha_visc)
+    fij = jax.vmap(force)(pos_i, vel_i, h_i, P_i, rho_i, omega_i, cs_i,
+                          pos_j, vel_j, h_j, P_j, rho_j, omega_j, cs_j,
+                          m_j, mask_j)
+    fji = jax.vmap(force)(pos_j, vel_j, h_j, P_j, rho_j, omega_j, cs_j,
+                          pos_i, vel_i, h_i, P_i, rho_i, omega_i, cs_i,
+                          m_i, mask_i)
+    return fij.dv, fij.du, fji.dv, fji.du

@@ -1,0 +1,7 @@
+"""Fused SSD (Mamba-2) kernel — the zamba2 §Perf fix (VMEM-resident block)."""
+
+from .kernel import ssd_scan
+from .ops import ssd_scan_op
+from .ref import ssd_scan_ref
+
+__all__ = ["ssd_scan", "ssd_scan_op", "ssd_scan_ref"]

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the fused SSD kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(u, dt, A, Bm, Cm, D, *, chunk: int = 64,
+                interpret: bool = True):
+    return ssd_scan(u, dt, A, Bm, Cm, D, chunk=chunk, interpret=interpret)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused SSD (Mamba-2) kernel.
+
+Sequential per-step scan of the scalar-decay-per-head SSM:
+
+    h_t = exp(Δ_t·A_h) · h_{t−1} + Δ_t · B_t ⊗ u_t
+    y_t = C_t · h_t + D_h · u_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(u, dt, A, Bm, Cm, D, *, h0=None):
+    """u (B, S, H, hp); dt (B, S, H); A/D (H,); Bm/Cm (B, S, N).
+
+    Returns (y (B, S, H, hp), h_final (B, H, N, hp)). f32 math.
+    """
+    B_, S, H, hp = u.shape
+    N = Bm.shape[-1]
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    h = jnp.zeros((B_, H, N, hp), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp            # (B,H,hp), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * A[None, :])   # (B,H)
+        h = h * da[:, :, None, None] \
+            + (dtt[:, :, None] * ut)[:, :, None, :] * bt[:, None, :, None]
+        y = jnp.einsum("bhnp,bn->bhp", h, ct) + ut * D[None, :, None]
+        return h, y
+
+    h, ys = jax.lax.scan(
+        step, h,
+        (uf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         Bm.astype(jnp.float32).transpose(1, 0, 2),
+         Cm.astype(jnp.float32).transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), h

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the real jitted step (train_step / prefill /
+decode_step) against ShapeDtypeStruct inputs on the production mesh,
+compiles it, and records:
+
+* ``memory_analysis()``  — per-device argument/output/temp bytes (fits?),
+* ``cost_analysis()``    — per-device HLO FLOPs and bytes accessed,
+* collective traffic     — parsed from the post-SPMD optimized HLO,
+* the three roofline terms + MODEL_FLOPS ratio (§Roofline).
+
+Results are cached as JSON under ``benchmarks/results/dryrun/`` so repeated
+invocations only compile missing cells.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen1.5-32b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all --multi-pod both
+    python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..analysis.hlo_parse import collective_summary
+from ..analysis.roofline import Roofline, model_flops, remat_overhead
+from ..configs import ARCH_NAMES, SHAPES, applicable, get_config
+from ..distributed.sharding_rules import ShardingRules
+from ..models.model import forward, init_params, make_caches, rolling_map
+from ..serve.serve_step import decode_step
+from ..train.optimizer import adam_init
+from ..train.train_step import TrainConfig, make_train_step
+from .mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "benchmarks", "results",
+                           "dryrun")
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.batch, shape.seq
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        toks = S
+        if cfg.vlm_patches:
+            toks = S - cfg.vlm_patches
+        out["tokens"] = _sds((B, toks), jnp.int32)
+        out["targets"] = _sds((B, toks), jnp.int32)
+        if cfg.is_encdec:
+            out["enc_inputs"] = _sds((B, S, cfg.d_model), cfg.dtype)
+        if cfg.vlm_patches:
+            out["patch_embeds"] = _sds((B, cfg.vlm_patches, cfg.d_model),
+                                       cfg.dtype)
+    elif shape.kind == "prefill":
+        toks = S - cfg.vlm_patches if cfg.vlm_patches else S
+        out["tokens"] = _sds((B, toks), jnp.int32)
+        if cfg.is_encdec:
+            out["enc_inputs"] = _sds((B, S, cfg.d_model), cfg.dtype)
+        if cfg.vlm_patches:
+            out["patch_embeds"] = _sds((B, cfg.vlm_patches, cfg.d_model),
+                                       cfg.dtype)
+    else:                                   # decode: 1 new token, KV = S
+        out["token"] = _sds((B, 1), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+        enc_len = S if cfg.is_encdec else 0
+        out["caches"] = jax.eval_shape(
+            lambda: make_caches(cfg, B, S, enc_len=enc_len,
+                                stacked=False)[0])
+    return out
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               variant: str = "baseline"):
+    """→ (fn, example_args tuple, in_shardings tuple)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name)
+    mode = "train" if shape.kind == "train" else "serve"
+    rules = ShardingRules(mesh, cfg, mode)
+    rules = apply_variant(variant, cfg, rules)
+    cfg = rules.cfg
+
+    params_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), _sds((2,), jnp.uint32))
+    params_sh = _named(mesh, rules.params_pspec(params_shapes))
+    bp = rules.tokens_pspec(shape.batch)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(adam_init, params_shapes)
+        opt_sh = _named(mesh, rules.opt_pspec(params_shapes))
+        batch = {k: v for k, v in specs.items()}
+        batch_sh = {}
+        for k, v in batch.items():
+            nd = v.ndim
+            batch_sh[k] = NamedSharding(mesh, P(*( [bp[0] if bp else None]
+                                                   + [None] * (nd - 1))))
+        step = make_train_step(cfg, TrainConfig(), rules)
+        # donate params+opt (in-place update); metrics sharding unspecified
+        return step, (params_shapes, opt_shapes, batch), dict(
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1)), cfg
+
+    if shape.kind == "prefill":
+        rmap = rolling_map(cfg, shape.seq)
+
+        def fn(params, batch):
+            res = forward(params, cfg, batch["tokens"], mode="prefill",
+                          rolling=rmap,
+                          enc_inputs=batch.get("enc_inputs"),
+                          patch_embeds=batch.get("patch_embeds"),
+                          constrain=rules.constrain)
+            return res.logits[:, -1], res.caches
+
+        batch = dict(specs)
+        batch_sh = {k: NamedSharding(
+            mesh, P(*([bp[0] if bp else None] + [None] * (v.ndim - 1))))
+            for k, v in batch.items()}
+        with mesh:
+            out_shapes = jax.eval_shape(fn, params_shapes, batch)
+        logits_sh = NamedSharding(mesh, P(bp[0] if bp else None, None))
+        caches_out_sh = _named(mesh, rules.caches_pspec(out_shapes[1]))
+        return fn, (params_shapes, batch), dict(
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(logits_sh, caches_out_sh)), cfg
+
+    # decode
+    rmap = rolling_map(cfg, shape.seq)
+    caches = specs["caches"]
+    caches_sh = _named(mesh, rules.caches_pspec(caches))
+
+    def fn(params, token, caches, pos):
+        return decode_step(params, cfg, token, caches, pos, rolling=rmap,
+                           constrain=rules.constrain)
+
+    tok_sh = NamedSharding(mesh, P(*(list(bp)[:1] + [None])))
+    pos_sh = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(mesh, P(bp[0] if bp else None, None))
+    # donate the caches: decode is an in-place cache update
+    return fn, (params_shapes, specs["token"], caches, specs["pos"]), dict(
+        in_shardings=(params_sh, tok_sh, caches_sh, pos_sh),
+        out_shardings=(logits_sh, caches_sh),
+        donate_argnums=(2,)), cfg
+
+
+# ----------------------------------------------------------------- variants
+def apply_variant(name: str, cfg, rules: ShardingRules) -> ShardingRules:
+    """Sharding/config variants for §Perf hillclimbing."""
+    if name == "baseline":
+        rules.cfg = cfg
+        return rules
+    from . import variants                  # registered separately
+    return variants.apply(name, cfg, rules)
+
+
+# ------------------------------------------------------------------- runner
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, force: bool = False,
+             variant: str = "baseline") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}__{variant}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        res = {"tag": tag, "status": "skipped", "reason": why}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        return res
+
+    res: Dict[str, Any] = {"tag": tag, "arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "variant": variant}
+    try:
+        from . import variants as variants_mod
+        mesh = variants_mod.mesh_override(variant, multi_pod) \
+            or make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        fn, args, jit_kwargs, eff_cfg = build_cell(arch, shape_name, mesh,
+                                                   variant=variant)
+        cfg = eff_cfg            # variant-modified config (remat flags etc.)
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(fn, **jit_kwargs).lower(*args)
+            res["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            res["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        res["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_estimate_bytes": int(mem.argument_size_in_bytes
+                                       + mem.output_size_in_bytes
+                                       + mem.temp_size_in_bytes
+                                       - mem.alias_size_in_bytes),
+            "hbm_per_chip": 16 * 1024 ** 3,
+        }
+        ca = compiled.cost_analysis()
+        res["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes_accessed": float(ca.get("bytes accessed",
+                                                      0.0))}
+        txt = compiled.as_text()
+        res["hlo_chars"] = len(txt)
+        res["collectives"] = collective_summary(txt)
+        del txt
+        mf = model_flops(cfg, shape, chips=chips)
+        rf = Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name,
+            flops_per_chip=res["cost"]["flops"],
+            bytes_per_chip=res["cost"]["bytes_accessed"],
+            collective_bytes_per_chip=res["collectives"]["traffic_bytes"],
+            model_flops_per_chip=mf,
+            executed_flops_per_chip=mf * remat_overhead(cfg, shape))
+        res["roofline"] = rf.row()
+        res["status"] = "ok"
+    except Exception as e:
+        res["status"] = "error"
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        gc.collect()
+
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_NAMES} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.multi_pod]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                ok, why = applicable(get_config(a), s)
+                print(f"{a:25s} {s:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                r = run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                             force=args.force, variant=args.variant)
+                status = r.get("status")
+                extra = ""
+                if status == "ok":
+                    ro = r["roofline"]
+                    extra = (f"bottleneck={ro['bottleneck']} "
+                             f"frac={ro['roofline_fraction']:.3f} "
+                             f"compile={r.get('compile_s')}s")
+                elif status == "error":
+                    extra = r.get("error", "")[:120]
+                print(f"[{r['tag']}] {status} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""LM model zoo for the assigned architectures."""
+
+from .config import ModelConfig
+from .layers import AttnSpec, KVCache, attention, mlp, rmsnorm, rope_tables
+from .mamba import (Mamba1State, Mamba2State, mamba1_forward, mamba1_step,
+                    mamba2_forward, mamba2_step)
+from .moe import MoEStats, moe
+from .model import (ForwardResult, forward, init_params, lm_loss, make_caches,
+                    plan_segments)
+
+__all__ = [
+    "ModelConfig", "AttnSpec", "KVCache", "attention", "mlp", "rmsnorm",
+    "rope_tables", "Mamba1State", "Mamba2State", "mamba1_forward",
+    "mamba1_step", "mamba2_forward", "mamba2_step", "MoEStats", "moe",
+    "ForwardResult", "forward", "init_params", "lm_loss", "make_caches",
+    "plan_segments",
+]

@@ -1,0 +1,382 @@
+"""Mamba-1 (falcon-mamba-7b) and Mamba-2/SSD (zamba2) blocks.
+
+Hardware adaptation notes (DESIGN.md §8): the CUDA selective-scan kernel
+streams the (d_inner, d_state) state through SRAM. The TPU-native training
+formulation here:
+
+* **Mamba-1** — per-channel diagonal A forbids the quadratic (matmul)
+  form, so training uses a two-level scan: an outer ``lax.scan`` over
+  chunks (saving only the (B, d_inner, d_state) carry per chunk) with a
+  ``jax.checkpoint``-ed inner scan over time steps — the classic sqrt-remat
+  that keeps HBM residuals at O(S/Q · state) instead of O(S · state).
+  ``repro.kernels.mamba_scan`` is the fused Pallas version (state lives in
+  VMEM across a sequential grid).
+* **Mamba-2 (SSD)** — scalar A per head admits the chunked matmul
+  (attention-like) form: intra-chunk (Q×Q) masked-decay matmuls on the MXU
+  plus a cheap inter-chunk state recurrence.
+
+Decode keeps (conv_state, ssm_state) per layer and costs O(1) per token —
+this is why the ``long_500k`` shape runs natively on the SSM archs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# =================================================================== Mamba-1
+class Mamba1State(NamedTuple):
+    conv: jax.Array     # (B, d_conv-1, d_inner)
+    ssm: jax.Array      # (B, d_inner, d_state) — always f32
+
+
+def init_mamba1(key, d_model: int, *, d_state: int = 16, d_conv: int = 4,
+                expand: int = 2, dt_rank: Optional[int] = None,
+                bcdt_rms: bool = False, dtype=jnp.float32) -> Params:
+    dI = expand * d_model
+    R = dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    sI = 1.0 / math.sqrt(dI)
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d_model, 2 * dI)) * s
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, dI)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((dI,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (dI, R + 2 * d_state)) * sI
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (R, dI)) / math.sqrt(R)
+                    ).astype(dtype),
+        "dt_bias": (jnp.log(jnp.exp(
+            jnp.exp(jax.random.uniform(ks[4], (dI,)) *
+                    (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+            ) - 1.0 + 1e-6)).astype(jnp.float32),   # softplus-inverse init
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (dI, 1))),
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (dI, d_model)) * sI
+                     ).astype(dtype),
+    }
+    if bcdt_rms:
+        p["b_norm"] = jnp.ones((d_state,), jnp.float32)
+        p["c_norm"] = jnp.ones((d_state,), jnp.float32)
+        p["dt_norm"] = jnp.ones((R,), jnp.float32)
+    return p
+
+
+def _mamba1_inputs(p: Params, x, *, d_state: int, bcdt_rms: bool):
+    """Shared projections: returns (xz-gated u, z, dt, B, C)."""
+    B_, S, _ = x.shape
+    dI = p["conv_w"].shape[1]
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)               # (B, S, dI) each
+    return u, z
+
+
+def _mamba1_ssm_params(p: Params, u, *, d_state: int, bcdt_rms: bool):
+    R = p["dt_proj"].shape[0]
+    proj = u @ p["x_proj"]                          # (B, S, R + 2N)
+    dt_r, Bm, Cm = jnp.split(proj, [R, R + d_state], axis=-1)
+    if bcdt_rms:
+        dt_r = _rms(dt_r, p["dt_norm"])
+        Bm = _rms(Bm, p["b_norm"])
+        Cm = _rms(Cm, p["c_norm"])
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _causal_conv(p: Params, u, conv_state=None):
+    """Depthwise causal conv along S. Returns (y, new_conv_state)."""
+    K, dI = p["conv_w"].shape
+    B_, S, _ = u.shape
+    if conv_state is None:
+        pad = jnp.zeros((B_, K - 1, dI), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)         # (B, S+K-1, dI)
+    y = sum(ext[:, i:i + S, :] * p["conv_w"][i][None, None, :]
+            for i in range(K))
+    y = y + p["conv_b"]
+    new_state = ext[:, -(K - 1):, :]
+    return jax.nn.silu(y), new_state
+
+
+def mamba1_forward(p: Params, x, *, d_state: int = 16,
+                   chunk: int = 64, bcdt_rms: bool = False,
+                   state: Optional[Mamba1State] = None,
+                   return_state: bool = False
+                   ) -> Tuple[jax.Array, Optional[Mamba1State]]:
+    """Full-sequence Mamba-1. x (B, S, d) → (B, S, d)."""
+    B_, S, d = x.shape
+    dI = p["conv_w"].shape[1]
+    u, z = _mamba1_inputs(p, x, d_state=d_state, bcdt_rms=bcdt_rms)
+    conv_state = state.conv if state is not None else None
+    u, new_conv = _causal_conv(p, u, conv_state)
+    dt, Bm, Cm = _mamba1_ssm_params(p, u, d_state=d_state, bcdt_rms=bcdt_rms)
+    A = -jnp.exp(p["A_log"])                        # (dI, N)
+    uf = u.astype(jnp.float32)
+
+    h0 = (state.ssm if state is not None
+          else jnp.zeros((B_, dI, d_state), jnp.float32))
+
+    # pad S to a multiple of chunk
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) *
+                                 (a.ndim - 2))
+        uf, dt, Bm, Cm = map(zpad, (uf, dt, Bm, Cm))
+    T = uf.shape[1] // Q
+
+    def chunk_body(h, inp):
+        uq, dtq, bq, cq = inp                       # (B, Q, …)
+
+        def step(hh, sinp):
+            ut, dtt, bt, ct = sinp                  # (B, dI), (B,dI), (B,N)…
+            dA = jnp.exp(dtt[:, :, None] * A[None])
+            hh = dA * hh + (dtt * ut)[:, :, None] * bt[:, None, :]
+            yt = jnp.einsum("bdn,bn->bd", hh, ct)
+            return hh, yt
+
+        stepped = jax.checkpoint(
+            lambda hh, si: jax.lax.scan(step, hh, si))
+        h, yq = stepped(h, (uq.transpose(1, 0, 2), dtq.transpose(1, 0, 2),
+                            bq.transpose(1, 0, 2), cq.transpose(1, 0, 2)))
+        return h, yq.transpose(1, 0, 2)             # (B, Q, dI)
+
+    chunked = lambda a: a.reshape(B_, T, Q, -1).transpose(1, 0, 2, 3)
+    h_fin, ys = jax.lax.scan(chunk_body, h0,
+                             (chunked(uf), chunked(dt), chunked(Bm),
+                              chunked(Cm)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B_, T * Q, dI)[:, :S]
+    y = y + uf[:, :S] * p["D"][None, None, :]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = Mamba1State(new_conv, h_fin) if return_state else None
+    return out, new_state
+
+
+def mamba1_step(p: Params, x, state: Mamba1State, *, d_state: int = 16,
+                bcdt_rms: bool = False) -> Tuple[jax.Array, Mamba1State]:
+    """Single-token decode. x (B, 1, d)."""
+    B_, S, d = x.shape
+    K, dI = p["conv_w"].shape
+    xz = x[:, 0] @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                # (B, dI)
+    # conv via state
+    ext = jnp.concatenate([state.conv.astype(u.dtype), u[:, None]], axis=1)
+    y = jnp.einsum("bkd,kd->bd", ext, p["conv_w"]) + p["conv_b"]
+    u = jax.nn.silu(y)
+    new_conv = ext[:, 1:]
+
+    dt, Bm, Cm = _mamba1_ssm_params(p, u[:, None], d_state=d_state,
+                                    bcdt_rms=bcdt_rms)
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    A = -jnp.exp(p["A_log"])
+    uf = u.astype(jnp.float32)
+    dA = jnp.exp(dt[:, :, None] * A[None])
+    h = dA * state.ssm + (dt * uf)[:, :, None] * Bm[:, None, :]
+    yt = jnp.einsum("bdn,bn->bd", h, Cm) + uf * p["D"][None]
+    yt = yt.astype(x.dtype) * jax.nn.silu(z)
+    return (yt @ p["out_proj"])[:, None], Mamba1State(new_conv, h)
+
+
+def make_mamba1_state(batch: int, d_model: int, *, d_state: int = 16,
+                      d_conv: int = 4, expand: int = 2,
+                      dtype=jnp.float32) -> Mamba1State:
+    dI = expand * d_model
+    return Mamba1State(jnp.zeros((batch, d_conv - 1, dI), dtype),
+                       jnp.zeros((batch, dI, d_state), jnp.float32))
+
+
+# =================================================================== Mamba-2
+class Mamba2State(NamedTuple):
+    conv: jax.Array     # (B, d_conv-1, conv_dim)
+    ssm: jax.Array      # (B, H, headdim, d_state) f32
+
+
+def init_mamba2(key, d_model: int, *, d_state: int = 64, d_conv: int = 4,
+                expand: int = 2, headdim: int = 64,
+                dtype=jnp.float32) -> Params:
+    dI = expand * d_model
+    H = dI // headdim
+    conv_dim = dI + 2 * d_state
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        # projects to [u (dI), B (N), C (N), dt (H), z (dI)]
+        "in_proj": (jax.random.normal(
+            ks[0], (d_model, 2 * dI + 2 * d_state + H)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, conv_dim)) * 0.5
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((dI,), dtype),
+        "out_proj": (jax.random.normal(ks[3], (dI, d_model))
+                     / math.sqrt(dI)).astype(dtype),
+    }
+
+
+def mamba2_forward(p: Params, x, *, d_state: int = 64, headdim: int = 64,
+                   chunk: int = 128, bf16_einsum: bool = False,
+                   state: Optional[Mamba2State] = None,
+                   return_state: bool = False
+                   ) -> Tuple[jax.Array, Optional[Mamba2State]]:
+    """SSD chunked matmul form. x (B, S, d) → (B, S, d).
+
+    ``bf16_einsum`` casts the large einsum operands (decay/Q² tensors, u, B,
+    C) to bf16 with f32 accumulation — halves the HBM traffic of the SSD
+    block at bf16-roundoff cost (decays ≤ 1, products well-conditioned);
+    the log-decay cumsum stays f32.
+    """
+    B_, S, d = x.shape
+    conv_dim = p["conv_w"].shape[1]
+    dI = p["out_proj"].shape[0]
+    H = dI // headdim
+
+    zxbcdt = x @ p["in_proj"]
+    z, ubc, dt_raw = jnp.split(zxbcdt, [dI, dI + conv_dim - dI + 0
+                                        + 2 * d_state + dI - dI], axis=-1) \
+        if False else (zxbcdt[..., :dI],
+                       zxbcdt[..., dI:dI + conv_dim],
+                       zxbcdt[..., dI + conv_dim:])
+    conv_state = state.conv if state is not None else None
+    ubc, new_conv = _causal_conv({"conv_w": p["conv_w"],
+                                  "conv_b": p["conv_b"]}, ubc, conv_state)
+    # stream dtype: natively bf16 when bf16_einsum (halves the (B,S,·) HBM
+    # traffic that dominates t_mem); log-decay/dt stay f32 always
+    sd = x.dtype if bf16_einsum else jnp.float32
+    u = ubc[..., :dI]
+    Bm = ubc[..., dI:dI + d_state].astype(sd)               # (B,S,N)
+    Cm = ubc[..., dI + d_state:].astype(sd)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                 # (H,)
+
+    uh = u.astype(sd).reshape(B_, S, H, headdim)
+    la = dt * A[None, None, :]                               # log decay (B,S,H)
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) *
+                               (a.ndim - 2))
+        uh2, Bm2, Cm2, la2, dt2 = (jnp.pad(uh, ((0, 0), (0, pad), (0, 0),
+                                                (0, 0))),
+                                   zp(Bm), zp(Cm), zp(la), zp(dt))
+    else:
+        uh2, Bm2, Cm2, la2, dt2 = uh, Bm, Cm, la, dt
+    T = uh2.shape[1] // Q
+
+    def tochunks(a):
+        return a.reshape((B_, T, Q) + a.shape[2:])
+
+    uc, bc, cc, lc, dc = map(tochunks, (uh2, Bm2, Cm2, la2, dt2))
+    # cumulative log-decay within chunk
+    Lc = jnp.cumsum(lc, axis=2)                              # (B,T,Q,H)
+
+    # intra-chunk: y[t] = Σ_{s≤t} C_t·B_s exp(L_t−L_s) dt_s u_s
+    # (mask in log space: exp(L_t−L_s) overflows for t<s before masking)
+    et = jnp.bfloat16 if bf16_einsum else jnp.float32
+
+    def cast(a):
+        return a.astype(et)
+
+    cb = jnp.einsum("btqn,btsn->btqs", cast(cc), cast(bc),
+                    preferred_element_type=jnp.float32)      # (B,T,Q,Q)
+    diff = Lc[:, :, :, None, :] - Lc[:, :, None, :, :]       # (B,T,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], diff, -jnp.inf))
+    M = cast(cb[..., None]) * cast(decay)
+    y_intra = jnp.einsum("btqsh,btsh,btshp->btqhp", M, cast(dc), cast(uc),
+                         preferred_element_type=jnp.float32).astype(sd)
+
+    # chunk states: S_c = Σ_s exp(L_Q − L_s) dt_s B_s ⊗ u_s
+    dec_end = jnp.exp(Lc[:, :, -1:, :] - Lc)                 # (B,T,Q,H)
+    Sc = jnp.einsum("btsh,btsh,btsn,btshp->bthnp",
+                    cast(dec_end), cast(dc), cast(bc), cast(uc),
+                    preferred_element_type=jnp.float32)      # (B,T,H,N,hp)
+
+    # inter-chunk recurrence over T (tiny scan)
+    chunk_decay = jnp.exp(Lc[:, :, -1, :])                   # (B,T,H)
+    h0 = (state.ssm.transpose(0, 1, 3, 2) if state is not None
+          else jnp.zeros((B_, H, d_state, headdim), jnp.float32))
+
+    def inter(h, inp):
+        sc, cd = inp                                         # (B,H,N,hp),(B,H)
+        h_out = h                                            # state entering
+        h = h * cd[:, :, None, None] + sc
+        return h, h_out
+
+    h_fin, h_in = jax.lax.scan(
+        inter, h0, (Sc.transpose(1, 0, 2, 3, 4),
+                    chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                     # (B,T,H,N,hp)
+
+    # inter-chunk contribution: C_t exp(L_t) h_in
+    y_inter = jnp.einsum("btqn,btqh,bthnp->btqhp",
+                         cast(cc), cast(jnp.exp(Lc)), cast(h_in),
+                         preferred_element_type=jnp.float32).astype(sd)
+    y = (y_intra + y_inter).reshape(B_, T * Q, H, headdim)[:, :S]
+    y = y + uh * p["D"][None, None, :, None].astype(sd)
+    y = y.reshape(B_, S, dI).astype(x.dtype)
+    y = _rms(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    new_state = None
+    if return_state:
+        new_state = Mamba2State(new_conv, h_fin.transpose(0, 1, 3, 2))
+    return out, new_state
+
+
+def mamba2_step(p: Params, x, state: Mamba2State, *, d_state: int = 64,
+                headdim: int = 64) -> Tuple[jax.Array, Mamba2State]:
+    """Single-token decode. x (B, 1, d)."""
+    B_, _, d = x.shape
+    dI = p["out_proj"].shape[0]
+    H = dI // headdim
+    conv_dim = p["conv_w"].shape[1]
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z = zxbcdt[:, :dI]
+    ubc = zxbcdt[:, dI:dI + conv_dim]
+    dt_raw = zxbcdt[:, dI + conv_dim:]
+    ext = jnp.concatenate([state.conv.astype(ubc.dtype), ubc[:, None]],
+                          axis=1)
+    yc = jnp.einsum("bkd,kd->bd", ext, p["conv_w"]) + p["conv_b"]
+    ubc = jax.nn.silu(yc)
+    new_conv = ext[:, 1:]
+    u = ubc[:, :dI].astype(jnp.float32).reshape(B_, H, headdim)
+    Bm = ubc[:, dI:dI + d_state].astype(jnp.float32)
+    Cm = ubc[:, dI + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None])                               # (B,H)
+    h = state.ssm * dA[:, :, None, None] \
+        + (dt[:, :, None] * u)[:, :, :, None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm) + u * p["D"][None, :, None]
+    y = y.reshape(B_, dI).astype(x.dtype)
+    y = _rms(y * jax.nn.silu(z), p["norm"])
+    return (y @ p["out_proj"])[:, None], Mamba2State(new_conv, h)
+
+
+def make_mamba2_state(batch: int, d_model: int, *, d_state: int = 64,
+                      d_conv: int = 4, expand: int = 2, headdim: int = 64,
+                      dtype=jnp.float32) -> Mamba2State:
+    dI = expand * d_model
+    H = dI // headdim
+    conv_dim = dI + 2 * d_state
+    return Mamba2State(jnp.zeros((batch, d_conv - 1, conv_dim), dtype),
+                       jnp.zeros((batch, H, headdim, d_state), jnp.float32))

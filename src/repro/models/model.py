@@ -1,0 +1,603 @@
+"""Model assembly: blocks, segment machinery, forward / prefill / decode.
+
+A model is a list of **segments** — (pattern, repeats) pairs where the
+pattern is a static tuple of block kinds (e.g. gemma3's
+``("local",)*5 + ("global",)``). Parameters and caches are stacked along the
+repeat dimension, and each segment lowers to a two-level ``lax.scan``:
+
+    outer scan over repeat groups  →  checkpointed inner scan over the group
+
+which is the sqrt-remat that keeps layer-boundary residuals at
+O(L/G · B·S·d) HBM while emitting one compact HLO body per segment (compile
+time stays flat in depth — essential for the 40-cell dry run).
+
+Block kinds:
+  attn     dense pre-norm attention + gated MLP (qwen/gemma/granite/…)
+  local    sliding-window attention + MLP (gemma3 local layers)
+  global   full attention + MLP, long-RoPE (gemma3 global layers)
+  moe      attention + top-k MoE FFN (mixtral)
+  mamba1   Mamba-1 mixer (falcon-mamba)
+  mamba2   Mamba-2/SSD mixer (zamba2 backbone)
+  mamba2s  shared-attention block (+ per-invocation LoRA) then Mamba-2
+           (zamba2's shared block, params reused across invocations)
+  enc      bidirectional attention + MLP (encoder)
+  dec      causal self-attn + cross-attn + MLP (decoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (AttnSpec, KVCache, apply_rope, attention, init_attention,
+                     init_mlp, layernorm, mlp, rmsnorm, rope_tables)
+from .mamba import (Mamba1State, Mamba2State, init_mamba1, init_mamba2,
+                    make_mamba1_state, make_mamba2_state, mamba1_forward,
+                    mamba1_step, mamba2_forward, mamba2_step)
+from .moe import MoEStats, init_moe, moe
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ helpers
+def _norm(cfg: ModelConfig, w, x):
+    return rmsnorm(x, w, plus_one=cfg.rms_plus_one)
+
+
+def attn_spec(cfg: ModelConfig, kind: str) -> AttnSpec:
+    window = None
+    base = cfg.rope_base
+    if kind == "local":
+        window = cfg.local_window
+    elif kind == "global":
+        base = cfg.global_rope_base
+    elif cfg.window is not None and kind in ("attn", "moe"):
+        window = cfg.window
+    return AttnSpec(d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                    head_dim=cfg.head_dim, qkv_bias=cfg.qkv_bias,
+                    qk_norm=cfg.qk_norm, softcap=cfg.attn_softcap,
+                    rope_base=base, window=window, causal=(kind != "enc"))
+
+
+def shared_attn_spec(cfg: ModelConfig) -> AttnSpec:
+    """Zamba2's shared block runs at concat width 2·d_model."""
+    return AttnSpec(d_model=2 * cfg.d_model, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                    rope_base=cfg.rope_base, causal=True)
+
+
+def plan_segments(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """Decoder-side segments (encoder handled separately)."""
+    L = cfg.n_layers
+    if cfg.local_global is not None:
+        loc, glob = cfg.local_global
+        k = loc + glob
+        segs: List[Tuple[Tuple[str, ...], int]] = []
+        if L // k:
+            segs.append((("local",) * loc + ("global",) * glob, L // k))
+        if L % k:
+            segs.append((("local",) * (L % k), 1))
+        return segs
+    if cfg.family == "moe":
+        return [(("moe",), L)]
+    if cfg.ssm == "mamba1":
+        return [(("mamba1",), L)]
+    if cfg.shared_attn_every:
+        k = cfg.shared_attn_every
+        segs = []
+        if L // k:
+            segs.append((("mamba2s",) + ("mamba2",) * (k - 1), L // k))
+        if L % k:
+            segs.append((("mamba2",) * (L % k), 1))
+        return segs
+    if cfg.ssm == "mamba2":
+        return [(("mamba2",), L)]
+    if cfg.is_encdec:
+        return [(("dec",), L)]
+    return [(("attn",), L)]
+
+
+def _group(repeats: int, target: int) -> int:
+    """Largest divisor of ``repeats`` that is ≤ target (≥1)."""
+    g = 1
+    for d in range(1, min(repeats, target) + 1):
+        if repeats % d == 0:
+            g = d
+    return g
+
+
+# ----------------------------------------------------------- block init
+def init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = cfg.dtype
+    d = cfg.d_model
+    if kind in ("attn", "local", "global", "enc", "moe", "dec"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p: Params = {
+            "ln1": jnp.zeros((d,), dt) if cfg.rms_plus_one
+            else jnp.ones((d,), dt),
+            "ln2": jnp.zeros((d,), dt) if cfg.rms_plus_one
+            else jnp.ones((d,), dt),
+            "attn": init_attention(k1, attn_spec(cfg, kind), dtype=dt),
+        }
+        if kind == "moe":
+            p["ffn"] = init_moe(k2, d, cfg.d_ff, cfg.n_experts, dtype=dt)
+        else:
+            p["ffn"] = init_mlp(k2, d, cfg.d_ff, dtype=dt)
+        if kind == "dec":
+            k4, k5 = jax.random.split(k3)
+            p["ln_x"] = jnp.ones((d,), dt)
+            p["xattn"] = init_attention(k4, attn_spec(cfg, "dec"), dtype=dt)
+        return p
+    if kind == "mamba1":
+        k1, = jax.random.split(key, 1)
+        return {
+            "ln1": jnp.ones((d,), dt),
+            "mix": init_mamba1(k1, d, d_state=cfg.d_state, d_conv=cfg.d_conv,
+                               expand=cfg.expand, bcdt_rms=True, dtype=dt),
+        }
+    if kind in ("mamba2", "mamba2s"):
+        k1, k2 = jax.random.split(key, 2)
+        p = {
+            "ln1": jnp.ones((d,), dt),
+            "mix": init_mamba2(k1, d, d_state=cfg.d_state, d_conv=cfg.d_conv,
+                               expand=cfg.expand, headdim=cfg.ssm_headdim,
+                               dtype=dt),
+        }
+        if kind == "mamba2s":
+            # per-invocation LoRA on the shared block's output projection
+            r = cfg.shared_lora_rank
+            ka, kb = jax.random.split(k2)
+            p["lora_a"] = (jax.random.normal(ka, (2 * d, r))
+                           / math.sqrt(2 * d)).astype(dt)
+            p["lora_b"] = jnp.zeros((r, d), dt)
+        return p
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_shared_block(key, cfg: ModelConfig) -> Params:
+    """Zamba2 shared transformer block at width 2·d_model, projecting to d."""
+    dt = cfg.dtype
+    d2 = 2 * cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((d2,), dt),
+        "ln2": jnp.ones((d2,), dt),
+        "attn": init_attention(k1, shared_attn_spec(cfg), dtype=dt),
+        "ffn": init_mlp(k2, d2, cfg.d_ff, dtype=dt),
+        "out": (jax.random.normal(k3, (d2, cfg.d_model))
+                / math.sqrt(d2)).astype(dt),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_padded, cfg.d_model))
+                  * 0.02).astype(cfg.dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.dtype) if cfg.rms_plus_one
+        else jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(keys[1],
+                                       (cfg.d_model, cfg.vocab_padded))
+                     / math.sqrt(cfg.d_model)).astype(cfg.dtype)
+
+    def stack_init(kind: str, n: int, key):
+        ks = jax.random.split(key, n)
+        return jax.vmap(lambda k: init_block(k, cfg, kind))(ks)
+
+    segs = plan_segments(cfg)
+    p["segments"] = []
+    for si, (pattern, repeats) in enumerate(segs):
+        kseg = jax.random.fold_in(keys[2], si)
+        pos_params = []
+        for pi, kind in enumerate(pattern):
+            pos_params.append(stack_init(kind, repeats,
+                                         jax.random.fold_in(kseg, pi)))
+        p["segments"].append(pos_params)
+
+    if cfg.shared_attn_every:
+        p["shared"] = init_shared_block(keys[3], cfg)
+    if cfg.is_encdec:
+        enc_params = []
+        ks = jax.random.split(keys[4], cfg.n_enc_layers)
+        enc_params = jax.vmap(lambda k: init_block(k, cfg, "enc"))(ks)
+        p["encoder"] = enc_params
+        p["enc_ln_f"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    return p
+
+
+# -------------------------------------------------------------------- caches
+def rolling_map(cfg: ModelConfig, cache_len: int) -> Dict[str, bool]:
+    """Which attention kinds use wrap-around (rolling) KV caches at this
+    cache length — static metadata needed alongside abstract caches."""
+    rolling: Dict[str, bool] = {}
+    for pattern, _ in plan_segments(cfg):
+        for kind in pattern:
+            if kind in ("attn", "local", "global", "moe", "enc", "dec"):
+                spec = attn_spec(cfg, kind)
+                rolling[kind] = (spec.window is not None
+                                 and cache_len > spec.window)
+    return rolling
+
+
+def make_caches(cfg: ModelConfig, batch: int, cache_len: int, *,
+                enc_len: int = 0, stacked: bool = True
+                ) -> Tuple[list, Dict[str, bool]]:
+    """Zero caches for decode, sized per block kind. Returns (caches,
+    rolling_map: kind → whether its KV cache wraps).
+
+    ``stacked=True`` → leaves carry a leading repeats dim (scan layout,
+    prefill). ``stacked=False`` → per-layer list (decode layout: the decode
+    step unrolls layers so every cache update aliases in place instead of
+    double-buffering through scan xs/ys — at 32k context the KV cache is
+    the dominant HBM tenant and must not be copied)."""
+    rolling: Dict[str, bool] = {}
+
+    def kv_len(kind: str) -> int:
+        spec = attn_spec(cfg, kind)
+        if spec.window is not None and cache_len > spec.window:
+            rolling[kind] = True
+            return spec.window
+        rolling.setdefault(kind, False)
+        return cache_len
+
+    def block_cache(kind: str):
+        if kind in ("attn", "local", "global", "moe", "enc"):
+            spec = attn_spec(cfg, kind)
+            L = kv_len(kind)
+            sh = (batch, L, spec.n_kv, spec.head_dim)
+            return KVCache(jnp.zeros(sh, cfg.dtype), jnp.zeros(sh, cfg.dtype),
+                           jnp.zeros((), jnp.int32))
+        if kind == "dec":
+            spec = attn_spec(cfg, kind)
+            sh = (batch, kv_len(kind), spec.n_kv, spec.head_dim)
+            self_c = KVCache(jnp.zeros(sh, cfg.dtype),
+                             jnp.zeros(sh, cfg.dtype),
+                             jnp.zeros((), jnp.int32))
+            shx = (batch, enc_len, spec.n_kv, spec.head_dim)
+            cross_c = KVCache(jnp.zeros(shx, cfg.dtype),
+                              jnp.zeros(shx, cfg.dtype),
+                              jnp.asarray(enc_len, jnp.int32))
+            return (self_c, cross_c)
+        if kind == "mamba1":
+            return make_mamba1_state(batch, cfg.d_model, d_state=cfg.d_state,
+                                     d_conv=cfg.d_conv, expand=cfg.expand,
+                                     dtype=cfg.dtype)
+        if kind == "mamba2":
+            return make_mamba2_state(batch, cfg.d_model, d_state=cfg.d_state,
+                                     d_conv=cfg.d_conv, expand=cfg.expand,
+                                     headdim=cfg.ssm_headdim, dtype=cfg.dtype)
+        if kind == "mamba2s":
+            spec = shared_attn_spec(cfg)
+            sh = (batch, cache_len, spec.n_kv, spec.head_dim)
+            kvc = KVCache(jnp.zeros(sh, cfg.dtype), jnp.zeros(sh, cfg.dtype),
+                          jnp.zeros((), jnp.int32))
+            return (kvc,
+                    make_mamba2_state(batch, cfg.d_model,
+                                      d_state=cfg.d_state, d_conv=cfg.d_conv,
+                                      expand=cfg.expand,
+                                      headdim=cfg.ssm_headdim,
+                                      dtype=cfg.dtype))
+        raise ValueError(kind)
+
+    caches = []
+    for (pattern, repeats) in plan_segments(cfg):
+        pos = []
+        for kind in pattern:
+            one = block_cache(kind)
+            if stacked:
+                pos.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (repeats,) + a.shape),
+                    one))
+            else:
+                pos.append([jax.tree.map(jnp.copy, one)
+                            for _ in range(repeats)])
+        caches.append(pos)
+    return caches, rolling
+
+
+# --------------------------------------------------------------- block apply
+@dataclasses.dataclass
+class BlockIO:
+    cfg: ModelConfig
+    mode: str                                  # train | prefill | decode
+    rope: Dict[str, Tuple[jax.Array, jax.Array]]
+    rolling: Dict[str, bool]
+    enc_out: Optional[jax.Array] = None
+    shared: Optional[Params] = None
+    x0: Optional[jax.Array] = None             # zamba2: initial embedding
+    constrain: Callable = lambda x, kind=None: x
+
+
+def _zero_aux(cfg: ModelConfig):
+    E = max(cfg.n_experts, 1)
+    return (jnp.zeros((), jnp.float32), jnp.zeros((E,), jnp.float32))
+
+
+def apply_block(p: Params, x, kind: str, io: BlockIO, cache):
+    cfg = io.cfg
+    aux = _zero_aux(cfg)
+    decode = io.mode == "decode"
+    prefill = io.mode == "prefill"
+
+    if kind in ("attn", "local", "global", "enc", "moe", "dec"):
+        spec = attn_spec(cfg, kind)
+        cos, sin = io.rope["global" if kind == "global" else "default"]
+        self_cache = cache[0] if kind == "dec" and cache is not None else cache
+        h = _norm(cfg, p["ln1"], x)
+        a, new_kv = attention(
+            p["attn"], h, spec, cos=cos, sin=sin,
+            cache=self_cache if decode else None,
+            update_cache=prefill,
+            rolling=io.rolling.get(kind, False) and decode)
+        x = io.constrain(x + a)
+        if kind == "dec":
+            h = _norm(cfg, p["ln_x"], x)
+            if decode:
+                xa, new_cross = attention(p["xattn"], h, spec, cross=True,
+                                          cache=cache[1])
+            else:
+                xa, new_cross = attention(p["xattn"], h, spec, cross=True,
+                                          kv_x=io.enc_out,
+                                          update_cache=prefill)
+            x = io.constrain(x + xa)
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            m, stats = moe(p["ffn"], h, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor)
+            aux = (stats.aux_loss, stats.tokens_per_expert)
+        else:
+            m = mlp(p["ffn"], h, act=cfg.act)
+        x = io.constrain(x + m)
+        if kind == "dec":
+            new_cache = ((new_kv if new_kv is not None else None,
+                          new_cross if new_cross is not None else None)
+                         if (decode or prefill) else None)
+        else:
+            new_cache = new_kv
+        return x, new_cache, aux
+
+    if kind == "mamba1":
+        h = _norm(cfg, p["ln1"], x)
+        if decode and x.shape[1] == 1:
+            y, new_state = mamba1_step(p["mix"], h, cache,
+                                       d_state=cfg.d_state, bcdt_rms=True)
+        else:
+            y, new_state = mamba1_forward(
+                p["mix"], h, d_state=cfg.d_state, chunk=cfg.ssm_chunk,
+                bcdt_rms=True, state=cache if decode else None,
+                return_state=decode or prefill)
+        return io.constrain(x + y), new_state, aux
+
+    if kind in ("mamba2", "mamba2s"):
+        if kind == "mamba2s":
+            kv_cache = cache[0] if cache is not None else None
+            ssm_cache = cache[1] if cache is not None else None
+            sh = io.shared
+            spec = shared_attn_spec(cfg)
+            cos, sin = io.rope["default"]
+            xc = jnp.concatenate([x, io.x0], axis=-1)
+            h = _norm(cfg, sh["ln1"], xc)
+            a, new_kv = attention(sh["attn"], h, spec, cos=cos, sin=sin,
+                                  cache=kv_cache if decode else None,
+                                  update_cache=prefill)
+            xc = xc + a
+            h2 = _norm(cfg, sh["ln2"], xc)
+            xc = xc + mlp(sh["ffn"], h2, act=cfg.act)
+            delta = xc @ sh["out"] + (xc @ p["lora_a"]) @ p["lora_b"]
+            x = io.constrain(x + delta)
+        else:
+            ssm_cache = cache
+            new_kv = None
+        h = _norm(cfg, p["ln1"], x)
+        if decode and x.shape[1] == 1:
+            y, new_state = mamba2_step(p["mix"], h, ssm_cache,
+                                       d_state=cfg.d_state,
+                                       headdim=cfg.ssm_headdim)
+        else:
+            y, new_state = mamba2_forward(
+                p["mix"], h, d_state=cfg.d_state, headdim=cfg.ssm_headdim,
+                chunk=cfg.ssm_chunk, bf16_einsum=cfg.ssm_bf16,
+                state=ssm_cache if decode else None,
+                return_state=decode or prefill)
+        x = io.constrain(x + y)
+        if kind == "mamba2s":
+            return x, ((new_kv, new_state)
+                       if (decode or prefill) else None), aux
+        return x, new_state, aux
+
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ------------------------------------------------------------ segment runner
+def run_segment(seg_params: list, seg_caches: Optional[list], x,
+                pattern: Tuple[str, ...], repeats: int, io: BlockIO):
+    """Two-level scan over one segment. Returns (x, new_caches, aux)."""
+    G = _group(repeats, io.cfg.scan_group)
+    R = repeats
+
+    def regroup(tree):
+        return jax.tree.map(
+            lambda a: a.reshape((R // G, G) + a.shape[1:]), tree)
+
+    aux0 = _zero_aux(io.cfg)
+    with_caches = seg_caches is not None
+    want_caches = io.mode in ("prefill", "decode")
+
+    # decode with per-layer (unstacked) caches: unrolled python loop so
+    # every cache update lowers to an in-place dynamic-update-slice on the
+    # donated buffer (scan would double-buffer the KV through xs/ys)
+    if (io.mode == "decode" and with_caches
+            and isinstance(seg_caches[0], list)):
+        aux = aux0
+        new_caches: list = [[None] * R for _ in pattern]
+        for r in range(R):
+            for i, kind in enumerate(pattern):
+                p_i = jax.tree.map(lambda a: a[r], seg_params[i])
+                c_i = seg_caches[i][r]
+                x, nc, a = apply_block(p_i, x, kind, io, c_i)
+                new_caches[i][r] = nc
+                aux = (aux[0] + a[0], aux[1] + a[1])
+        return x, [list(nc) for nc in new_caches], aux
+
+    def make_block_fn(kind: str):
+        fn = lambda p, x, c: apply_block(p, x, kind, io, c)
+        if io.mode == "train" and io.cfg.block_remat:
+            # second remat level: recompute block internals (incl. the S×S
+            # softmax) in the backward pass — only block inputs persist
+            return jax.checkpoint(fn)
+        return fn
+
+    block_fns = [make_block_fn(kind) for kind in pattern]
+
+    def inner_body(carry, xs):
+        x, aux = carry
+        new_caches = []
+        for i, _kind in enumerate(pattern):
+            p_i = xs[0][i]
+            c_i = xs[1][i] if with_caches else None
+            x, nc, a = block_fns[i](p_i, x, c_i)
+            new_caches.append(nc)
+            aux = (aux[0] + a[0], aux[1] + a[1])
+        ys = tuple(new_caches) if want_caches else 0
+        return (x, aux), ys
+
+    def outer_body(carry, xs):
+        return jax.lax.scan(inner_body, carry, xs)
+
+    if io.mode == "train":
+        outer = jax.checkpoint(outer_body)
+    else:
+        outer = outer_body
+
+    xs_params = regroup(tuple(seg_params))
+    xs_caches = regroup(tuple(seg_caches)) if with_caches else None
+    if with_caches:
+        xs = (xs_params, xs_caches)
+    else:
+        xs = (xs_params, xs_params)        # dummy second slot (unused)
+
+    def body(carry, g_xs):
+        return outer(carry, (g_xs[0], g_xs[1]))
+
+    (x, aux), ys = jax.lax.scan(body, (x, aux0), xs)
+    new_caches = None
+    if want_caches:
+        new_caches = jax.tree.map(
+            lambda a: a.reshape((R,) + a.shape[2:]), ys)
+        new_caches = list(new_caches)
+    return x, new_caches, aux
+
+
+# ----------------------------------------------------------------- top level
+def _rope_for(cfg: ModelConfig, positions) -> Dict[str, tuple]:
+    out = {"default": rope_tables(positions, cfg.head_dim, cfg.rope_base)}
+    if cfg.local_global is not None:
+        out["global"] = rope_tables(positions, cfg.head_dim,
+                                    cfg.global_rope_base)
+    else:
+        out["global"] = out["default"]
+    return out
+
+
+def _run_encoder(params: Params, cfg: ModelConfig, enc_in, io: BlockIO):
+    """Encoder stack over precomputed frame embeddings (audio stub)."""
+    x = enc_in.astype(cfg.dtype)
+    enc_io = dataclasses.replace(
+        io, mode="train", enc_out=None,
+        rope=_rope_for(cfg, jnp.arange(x.shape[1])))
+    x, _, _ = run_segment([params["encoder"]], None, x, ("enc",),
+                          cfg.n_enc_layers, enc_io)
+    return rmsnorm(x, params["enc_ln_f"])
+
+
+def _embed(params: Params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    return x
+
+
+def _logits(params: Params, cfg: ModelConfig, x):
+    x = _norm(cfg, params["ln_f"], x)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["head"]
+
+
+class ForwardResult(NamedTuple):
+    logits: jax.Array
+    caches: Optional[list]
+    aux_loss: jax.Array
+    expert_counts: jax.Array
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, *,
+            mode: str = "train", caches: Optional[list] = None,
+            rolling: Optional[Dict[str, bool]] = None,
+            positions=None, enc_inputs=None, patch_embeds=None,
+            constrain: Callable = lambda x, kind=None: x) -> ForwardResult:
+    """Unified forward.
+
+    train:   tokens (B, S)                          → logits (B, S, V)
+    prefill: as train, returns caches
+    decode:  tokens (B, S_small) + caches + positions → logits + new caches
+    enc-dec: enc_inputs (B, S_enc, d) precomputed embeddings (stub frontend)
+    vlm:     patch_embeds (B, P, d) prepended to token embeddings
+    """
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(cfg.dtype), x], axis=1)
+        S = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    io = BlockIO(cfg=cfg, mode=mode, rope=_rope_for(cfg, positions),
+                 rolling=rolling or {}, constrain=constrain)
+    if cfg.shared_attn_every:
+        io.shared = params["shared"]
+        io.x0 = x
+    if cfg.is_encdec:
+        if mode == "decode":
+            io.enc_out = None          # cross caches already built
+        else:
+            assert enc_inputs is not None, "enc-dec needs encoder inputs"
+            io.enc_out = _run_encoder(params, cfg, enc_inputs, io)
+
+    aux = _zero_aux(cfg)
+    new_caches = [] if mode in ("prefill", "decode") else None
+    for si, (pattern, repeats) in enumerate(plan_segments(cfg)):
+        seg_c = caches[si] if caches is not None else None
+        x, nc, a = run_segment(params["segments"][si], seg_c, x, pattern,
+                               repeats, io)
+        if new_caches is not None:
+            new_caches.append(nc)
+        aux = (aux[0] + a[0], aux[1] + a[1])
+
+    logits = _logits(params, cfg, x)
+    return ForwardResult(logits, new_caches, aux[0], aux[1])
+
+
+def lm_loss(params: Params, cfg: ModelConfig, tokens, targets, *,
+            aux_weight: float = 0.01, constrain=lambda x, kind=None: x,
+            enc_inputs=None, patch_embeds=None):
+    """Causal LM cross-entropy (+ MoE aux loss)."""
+    res = forward(params, cfg, tokens, mode="train", constrain=constrain,
+                  enc_inputs=enc_inputs, patch_embeds=patch_embeds)
+    logits = res.logits
+    if patch_embeds is not None:
+        logits = logits[:, patch_embeds.shape[1]:]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             targets[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if cfg.n_experts:
+        loss = loss + aux_weight * res.aux_loss
+    return loss, res.expert_counts

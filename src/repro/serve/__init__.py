@@ -1,0 +1,5 @@
+"""Serving substrate."""
+
+from .serve_step import decode_step, greedy_generate, pad_caches, prefill
+
+__all__ = ["decode_step", "greedy_generate", "pad_caches", "prefill"]

@@ -1,0 +1,120 @@
+"""Serving: prefill and decode steps over the zoo's cache structures."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.layers import KVCache
+from ..models.model import forward, make_caches, plan_segments
+
+
+def _pad_kv(kv: KVCache, target_len: int, rolling: bool) -> KVCache:
+    """Grow a prefill-built KV cache (stacked leading repeat dim) to
+    ``target_len`` slots; rolling caches keep the last ``target_len`` keys in
+    wrap-aligned slots."""
+    R, B, S0, K, hd = kv.k.shape
+    if rolling:
+        W = target_len
+        # slot s ← key position p: the largest p < S0 with p ≡ s (mod W)
+        s = jnp.arange(W)
+        p = s + ((S0 - 1 - s) // W) * W
+        valid = (p >= 0) & (p < S0)
+        idx = jnp.clip(p, 0, S0 - 1)
+        k = jnp.where(valid[None, None, :, None, None],
+                      kv.k[:, :, idx], 0)
+        v = jnp.where(valid[None, None, :, None, None],
+                      kv.v[:, :, idx], 0)
+        return KVCache(k, v, kv.pos)
+    pad = target_len - S0
+    if pad <= 0:
+        return kv
+    padw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+    return KVCache(jnp.pad(kv.k, padw), jnp.pad(kv.v, padw), kv.pos)
+
+
+def pad_caches(cfg: ModelConfig, caches: list, cache_len: int,
+               rolling: Dict[str, bool]) -> list:
+    """Grow prefill caches to decode capacity, kind-aware, and convert the
+    stacked (scan) layout into the per-layer list (unrolled decode)
+    layout."""
+    from ..models.model import attn_spec
+    out = []
+    for si, (pattern, repeats) in enumerate(plan_segments(cfg)):
+        pos_out = []
+        for pi, kind in enumerate(pattern):
+            c = caches[si][pi]
+            if kind in ("attn", "local", "global", "moe", "enc"):
+                spec = attn_spec(cfg, kind)
+                roll = rolling.get(kind, False)
+                tgt = spec.window if roll else cache_len
+                padded = _pad_kv(c, tgt, roll)
+            elif kind == "dec":
+                self_c, cross_c = c
+                padded = (_pad_kv(self_c, cache_len, False), cross_c)
+            elif kind == "mamba2s":
+                kv, ssm = c
+                padded = (_pad_kv(kv, cache_len, False), ssm)
+            else:                        # mamba states pass through
+                padded = c
+            # unstack: (R, …) leaves → list of R per-layer caches
+            pos_out.append([jax.tree.map(lambda a: a[r], padded)
+                            for r in range(repeats)])
+        out.append(pos_out)
+    return out
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, cache_len: int,
+            enc_inputs=None, patch_embeds=None,
+            constrain: Callable = lambda x, kind=None: x):
+    """Run the prompt, return (last-token logits, decode-ready caches)."""
+    _, rolling = make_caches(cfg, tokens.shape[0], cache_len,
+                             enc_len=enc_inputs.shape[1]
+                             if enc_inputs is not None else 0)
+    res = forward(params, cfg, tokens, mode="prefill", rolling=rolling,
+                  enc_inputs=enc_inputs, patch_embeds=patch_embeds,
+                  constrain=constrain)
+    caches = pad_caches(cfg, res.caches, cache_len, rolling)
+    return res.logits[:, -1], caches, rolling
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos, *,
+                rolling: Dict[str, bool],
+                constrain: Callable = lambda x, kind=None: x):
+    """One decode step. token (B, 1) int32; pos scalar int32 (tokens so far).
+
+    Returns (logits (B, vocab), new caches).
+    """
+    positions = pos + jnp.arange(token.shape[1])
+    res = forward(params, cfg, token, mode="decode", caches=caches,
+                  rolling=rolling, positions=positions, constrain=constrain)
+    return res.logits[:, -1], res.caches
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, n_new: int, *,
+                    cache_len: Optional[int] = None, enc_inputs=None,
+                    patch_embeds=None):
+    """Simple greedy generation driver (small-scale examples/tests)."""
+    B, S0 = prompt.shape
+    cache_len = cache_len or (S0 + n_new)
+    logits, caches, rolling = prefill(params, cfg, prompt,
+                                      cache_len=cache_len,
+                                      enc_inputs=enc_inputs,
+                                      patch_embeds=patch_embeds)
+    extra = patch_embeds.shape[1] if patch_embeds is not None else 0
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    pos = jnp.asarray(S0 + extra, jnp.int32)
+    step = jax.jit(functools.partial(decode_step, cfg=cfg, rolling=rolling),
+                   static_argnames=())
+    for _ in range(n_new - 1):
+        logits, caches = decode_step(params, cfg, tok, caches, pos,
+                                     rolling=rolling)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+        pos = pos + 1
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,21 @@
+"""SPH substrate: the paper's physics + the task-based engine."""
+
+from .cellgrid import (GridSpec, PairList, ParticleCells, bin_particles,
+                       build_pair_list, choose_grid, unbin)
+from .engine import (SPHConfig, SPHState, Simulation, build_taskgraph,
+                     cfl_timestep, compute_accelerations, init_state, step)
+from .ic import clustered_ic, uniform_ic
+from .physics import (GAMMA, density_block, eos_pressure, force_block,
+                      ghost_update, smoothing_length_update, sound_speed)
+from .smoothing import dw_dh, get_kernel, w_cubic, w_wendland_c2
+
+__all__ = [
+    "GridSpec", "PairList", "ParticleCells", "bin_particles",
+    "build_pair_list", "choose_grid", "unbin",
+    "SPHConfig", "SPHState", "Simulation", "build_taskgraph", "cfl_timestep",
+    "compute_accelerations", "init_state", "step",
+    "clustered_ic", "uniform_ic",
+    "GAMMA", "density_block", "eos_pressure", "force_block", "ghost_update",
+    "smoothing_length_update", "sound_speed",
+    "dw_dh", "get_kernel", "w_cubic", "w_wendland_c2",
+]

@@ -1,0 +1,73 @@
+"""SPH smoothing kernels W(r, h) and derivatives (paper §2, eq. (1)).
+
+Convention: the kernel has compact support of radius ``h`` — i.e. W(r,h) = 0
+for r >= h, matching the paper's pair predicate ``r_ij < h_i``. All kernels
+are 3-D and normalised so that ∫ W d³r = 1.
+
+Derivatives provided:
+  * ``grad_w``   — dW/dr (scalar radial derivative; ∇W = dW/dr · r̂)
+  * ``dw_dh``    — ∂W/∂h, used for the Ω correction term
+                   (∂W/∂h = −(3·W + r·dW/dr)/h for any 3-D scaling kernel)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_CUBIC_NORM_3D = 8.0 / jnp.pi     # × h⁻³, for q = r/h in [0, 1]
+_WENDLAND_C2_NORM_3D = 21.0 / (2.0 * jnp.pi)
+
+
+def w_cubic(r, h):
+    """M4 cubic spline, support radius h."""
+    q = r / h
+    sigma = _CUBIC_NORM_3D / (h * h * h)
+    w1 = 1.0 - 6.0 * q * q + 6.0 * q * q * q          # q <= 1/2
+    w2 = 2.0 * (1.0 - q) ** 3                          # 1/2 < q <= 1
+    w = jnp.where(q <= 0.5, w1, w2)
+    return jnp.where(q < 1.0, sigma * w, 0.0)
+
+
+def dwdr_cubic(r, h):
+    q = r / h
+    sigma = _CUBIC_NORM_3D / (h ** 4)
+    d1 = -12.0 * q + 18.0 * q * q
+    d2 = -6.0 * (1.0 - q) ** 2
+    d = jnp.where(q <= 0.5, d1, d2)
+    return jnp.where(q < 1.0, sigma * d, 0.0)
+
+
+def w_wendland_c2(r, h):
+    """Wendland C2, support radius h."""
+    q = r / h
+    sigma = _WENDLAND_C2_NORM_3D / (h * h * h)
+    w = (1.0 - q) ** 4 * (4.0 * q + 1.0)
+    return jnp.where(q < 1.0, sigma * w, 0.0)
+
+
+def dwdr_wendland_c2(r, h):
+    q = r / h
+    sigma = _WENDLAND_C2_NORM_3D / (h ** 4)
+    d = -20.0 * q * (1.0 - q) ** 3
+    return jnp.where(q < 1.0, sigma * d, 0.0)
+
+
+_KERNELS = {
+    "cubic": (w_cubic, dwdr_cubic),
+    "wendland_c2": (w_wendland_c2, dwdr_wendland_c2),
+}
+
+
+def get_kernel(name: str):
+    """Return (W, dW/dr) callables."""
+    try:
+        return _KERNELS[name]
+    except KeyError:
+        raise ValueError(f"unknown kernel {name!r}; have {list(_KERNELS)}")
+
+
+def dw_dh(r, h, name: str = "cubic"):
+    """∂W/∂h = −(3W + r·dW/dr)/h (3-D scaling identity)."""
+    w_fn, dwdr_fn = get_kernel(name)
+    return -(3.0 * w_fn(r, h) + r * dwdr_fn(r, h)) / h

@@ -1,0 +1,87 @@
+"""AdamW with optionally-sharded (ZeRO-1 style) optimizer state.
+
+Plain-function optimizer over parameter pytrees. Optimizer moments are kept
+in f32 regardless of parameter dtype (mixed-precision training); the
+sharding of the moments follows the *parameter* sharding plus extra sharding
+over the data axis (ZeRO-1) supplied by ``distributed.sharding_rules``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any          # f32 pytree like params
+    nu: Any          # f32 pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(jnp.zeros((), jnp.int32), zeros,
+                     jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(cfg: AdamConfig, step):
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adam_step(cfg: AdamConfig, params, grads, state: AdamState
+              ) -> Tuple[Any, AdamState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1 ** step)
+        nu_hat = nu / (1 - cfg.b2 ** step)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a), new_mu.append(b), new_nu.append(c)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (tdef.unflatten(new_p),
+            AdamState(step, tdef.unflatten(new_mu), tdef.unflatten(new_nu)),
+            metrics)

@@ -1,0 +1,70 @@
+"""Jitted training step with sharding, remat and optional compression."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.model import lm_loss
+from ..distributed.sharding_rules import ShardingRules
+from .optimizer import AdamConfig, AdamState, adam_init, adam_step
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adam: AdamConfig = AdamConfig()
+    aux_weight: float = 0.01
+    compression: Optional[str] = None        # None | "int8" | "topk"
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    rules: Optional[ShardingRules] = None
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) → (params, opt, metrics).
+
+    The sqrt-remat over layers lives inside the model (run_segment); the
+    sharding rules inject activation constraints. Gradients are averaged
+    over the batch implicitly by the loss mean — under pjit the data axis
+    all-reduce is emitted by SPMD.
+    """
+    constrain = rules.constrain if rules is not None \
+        else (lambda x, kind=None: x)
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch["tokens"], batch["targets"],
+                       aux_weight=tcfg.aux_weight, constrain=constrain,
+                       enc_inputs=batch.get("enc_inputs"),
+                       patch_embeds=batch.get("patch_embeds"))
+
+    def train_step(params, opt_state: AdamState, batch):
+        (loss, counts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adam_step(tcfg.adam, params, grads,
+                                          opt_state)
+        metrics = {"loss": loss, "expert_counts": counts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key, tcfg: TrainConfig,
+                     rules: Optional[ShardingRules] = None):
+    """Initialise (params, opt_state), sharded if rules are given."""
+    from ..models.model import init_params
+    if rules is None:
+        params = init_params(cfg, key)
+        return params, adam_init(params)
+    # jit the initialiser with output shardings so parameters materialise
+    # directly on their devices (no host round-trip at 32B scale)
+    abstract = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    shardings = rules.params_sharding(abstract)
+    params = jax.jit(lambda k: init_params(cfg, k),
+                     out_shardings=shardings)(key)
+    opt = adam_init(params)       # inherits param shardings leafwise
+    return params, opt

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single real CPU device — NEVER set a fake device count
+# here (the dry-run sets 512 in its own process only).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_default_matmul_precision", "float32")

@@ -1,0 +1,66 @@
+"""Recursive cell splitting (§3.1) properties."""
+
+import numpy as np
+import pytest
+
+from repro.sph.adaptive import LeafCell, refined_cell_graph, split_cells
+
+
+def clustered_positions(n=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0.3, 0.02, (n // 2, 3))
+    b = rng.random((n - n // 2, 3))
+    return np.clip(np.concatenate([a, b]), 0, 0.999)
+
+
+def test_split_conserves_particles():
+    pos = clustered_positions()
+    leaves = split_cells(pos, 1.0, 4, threshold=32, max_levels=4)
+    assert sum(l.occupancy for l in leaves) == len(pos)
+
+
+def test_split_respects_threshold_or_level_cap():
+    pos = clustered_positions()
+    leaves = split_cells(pos, 1.0, 4, threshold=32, max_levels=4)
+    for l in leaves:
+        assert l.occupancy <= 32 or l.level == 4
+
+
+def test_no_split_when_uniform():
+    rng = np.random.default_rng(1)
+    pos = rng.random((128, 3))
+    leaves = split_cells(pos, 1.0, 4, threshold=64, max_levels=3)
+    # 64 base cells, ~2 particles each: nothing splits
+    assert all(l.level == 0 for l in leaves)
+
+
+def test_refined_graph_weights_positive_and_bounded():
+    pos = clustered_positions()
+    node_w, edges, leaves = refined_cell_graph(pos, 1.0, 4, threshold=32,
+                                               max_levels=4, n_ngb=16.0)
+    assert (node_w > 0).all()
+    occ = np.array([l.occupancy for l in leaves])
+    # adaptive-h cost: no node may exceed 2·n_ngb·occ + 3·occ
+    assert (node_w <= 2 * 16.0 * occ + 3 * occ + 1e-9).all()
+    # edges reference valid leaves and are symmetric-by-construction keys
+    for (a, b), w in edges.items():
+        assert 0 <= a < b < len(leaves)
+        assert w > 0
+
+
+def test_adjacency_includes_mixed_levels_and_periodic():
+    # two particles in opposite corners: periodic neighbours
+    pos = np.array([[0.01, 0.01, 0.01], [0.99, 0.99, 0.99]])
+    node_w, edges, leaves = refined_cell_graph(pos, 1.0, 4, threshold=64,
+                                               max_levels=2)
+    assert len(leaves) == 2
+    assert (0, 1) in edges     # corner-touching across the periodic wrap
+
+
+def test_splitting_reduces_max_node_weight():
+    pos = clustered_positions()
+    w0, _, l0 = refined_cell_graph(pos, 1.0, 4, threshold=10 ** 9,
+                                   max_levels=0)
+    w1, _, l1 = refined_cell_graph(pos, 1.0, 4, threshold=32, max_levels=4)
+    assert w1.max() < w0.max()
+    assert len(l1) > len(l0)

@@ -1,0 +1,64 @@
+"""Flash attention Pallas kernel vs full-softmax oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+
+def make_qkv(B, S, T, H, K, hd, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32),
+                    dtype)
+    k = jnp.asarray(rng.standard_normal((B, T, K, hd)).astype(np.float32),
+                    dtype)
+    v = jnp.asarray(rng.standard_normal((B, T, K, hd)).astype(np.float32),
+                    dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,K,hd", [
+    (1, 64, 4, 4, 32),     # MHA
+    (2, 128, 8, 2, 16),    # GQA 4:1
+    (1, 256, 4, 1, 64),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(B, S, H, K, hd, causal):
+    q, k, v = make_qkv(B, S, S, H, K, hd, seed=S + H)
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_sliding_window(window):
+    q, k, v = make_qkv(1, 256, 256, 4, 4, 32, seed=window)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    q, k, v = make_qkv(1, 128, 128, 4, 4, 32, seed=5, dtype=jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_uneven_blocks():
+    """Block sizes that don't match S exactly must still tile."""
+    q, k, v = make_qkv(2, 96, 96, 2, 2, 16, seed=7)
+    got = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

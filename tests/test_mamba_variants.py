@@ -1,0 +1,33 @@
+"""Mamba-2 numerics knobs: chunk invariance and bf16 einsum tolerance."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba import init_mamba2, mamba2_forward
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p = init_mamba2(jax.random.PRNGKey(0), 64, d_state=16, headdim=16,
+                    dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64)) * 0.3
+    y_ref, _ = mamba2_forward(p, x, d_state=16, headdim=16, chunk=16)
+    return p, x, y_ref
+
+
+def test_chunk_size_invariance(setup):
+    p, x, y_ref = setup
+    for chunk in (8, 32, 64):
+        y, _ = mamba2_forward(p, x, d_state=16, headdim=16, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_bf16_einsum_within_tolerance(setup):
+    p, x, y_ref = setup
+    y, _ = mamba2_forward(p, x, d_state=16, headdim=16, chunk=16,
+                          bf16_einsum=True)
+    scale = max(float(jnp.abs(y_ref).max()), 1e-6)
+    assert float(jnp.abs(y - y_ref).max()) / scale < 0.02

@@ -1,0 +1,152 @@
+"""Multi-device correctness, run in subprocesses with 8 fake CPU devices.
+
+The main test process keeps the single real device (conftest rule); each
+case here launches an isolated interpreter with
+``--xla_force_host_platform_device_count=8`` and asserts inside it.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_subprocess(body: str, timeout=900):
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, os.path.join(%r, "src"))
+        import numpy as np
+        import jax, jax.numpy as jnp
+        jax.config.update("jax_default_matmul_precision", "float32")
+        assert len(jax.devices()) == 8
+    """ % os.path.abspath(ROOT)) + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, \
+        f"subprocess failed:\nSTDOUT:{proc.stdout}\nSTDERR:{proc.stderr[-3000:]}"
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_overlap_collectives_equivalence():
+    run_subprocess("""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.distributed import allgather_matmul, matmul_reducescatter
+        mesh = jax.make_mesh((8,), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((32, 48)).astype(np.float32))
+        want = x @ w
+        got = jax.jit(lambda x, w: allgather_matmul(x, w, mesh))(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        got2 = jax.jit(lambda x, w: matmul_reducescatter(x, w, mesh))(x, w)
+        np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        print("overlap OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sp_halo_attention_equivalence():
+    run_subprocess("""
+        from repro.distributed import (full_window_attention_ref,
+                                       sp_local_attention)
+        mesh = jax.make_mesh((8,), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(1)
+        B, S, H, hd, W = 2, 128, 4, 16, 16
+        q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
+        want = full_window_attention_ref(q, k, v, window=W)
+        got = jax.jit(lambda q, k, v: sp_local_attention(
+            q, k, v, mesh, window=W))(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+        print("halo OK")
+    """)
+
+
+@pytest.mark.slow
+def test_distributed_sph_matches_host_engine():
+    run_subprocess("""
+        from repro.sph import uniform_ic
+        from repro.sph.cellgrid import (bin_particles, build_pair_list,
+                                        choose_grid)
+        from repro.sph.engine import SPHConfig, init_state, step as hstep
+        from repro.sph.distributed import DistSimulation
+
+        ic = uniform_ic(8, seed=0)
+        rng = np.random.default_rng(1)
+        ic["vel"] = (ic["vel"] + 0.1 * rng.standard_normal(ic["vel"].shape)
+                     ).astype(np.float32)
+        spec = choose_grid(ic["box"], float(ic["h"].max()), len(ic["pos"]))
+        cells, perm = bin_particles(spec, ic["pos"], ic["vel"], ic["mass"],
+                                    ic["u"], ic["h"])
+        pairs = build_pair_list(spec)
+        cfg = SPHConfig(alpha_visc=0.8)
+        st = init_state(cells, pairs, cfg)
+        for _ in range(2):
+            st = hstep(st, pairs, jnp.float32(0.002), ic["box"], cfg)
+        for halo in ("allgather", "ring"):
+            mesh = jax.make_mesh((8,), ("data",),
+                                 axis_types=(jax.sharding.AxisType.Auto,))
+            ds = DistSimulation(cells, pairs, spec, mesh, cfg=cfg, halo=halo)
+            for _ in range(2):
+                ds.step(0.002)
+            got = ds.gather_cells()
+            m = np.asarray(cells.mask) > 0
+            for name in ("pos", "vel", "u"):
+                a = np.asarray(getattr(st.cells, name))
+                b = np.asarray(getattr(got, name))
+                assert np.abs(a - b)[m].max() < 5e-4, (halo, name)
+        print("sph dist OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    """pjit'd train step on a (4,2) mesh == unsharded step."""
+    run_subprocess("""
+        import dataclasses
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.distributed import ShardingRules
+        from repro.train import (AdamConfig, TrainConfig, init_train_state,
+                                 make_train_step)
+        cfg = dataclasses.replace(
+            get_config("granite-8b", reduced=True), dtype=jnp.float32,
+            n_layers=2, d_model=32, d_ff=64, n_heads=4, n_kv=2, head_dim=8,
+            vocab=128)
+        tcfg = TrainConfig(adam=AdamConfig(lr=1e-3))
+        params, opt = init_train_state(cfg, jax.random.PRNGKey(0), tcfg)
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                         cfg.vocab),
+            "targets": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                                          cfg.vocab)}
+        ref_step = jax.jit(make_train_step(cfg, tcfg))
+        p_ref, o_ref, m_ref = ref_step(params, opt, batch)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rules = ShardingRules(mesh, cfg, "train")
+        psh = rules.params_sharding(params)
+        params_s = jax.tree.map(jax.device_put, params, psh)
+        step = jax.jit(make_train_step(cfg, tcfg, rules))
+        with mesh:
+            p_new, o_new, m_new = step(params_s, opt, batch)
+        assert abs(float(m_new["loss"]) - float(m_ref["loss"])) < 1e-4
+        for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_new)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-4, atol=5e-4)
+        print("sharded train OK")
+    """)

@@ -1,0 +1,89 @@
+"""Multilevel partitioner properties (paper §3.2's METIS role)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Graph, evaluate, partition_geometric, partition_graph)
+
+
+def random_geometric_graph(n, radius, seed, weighted_nodes=False):
+    rng = np.random.default_rng(seed)
+    pos = rng.random((n, 3))
+    edges = {}
+    for i in range(n):
+        d = np.linalg.norm(pos - pos[i], axis=1)
+        for j in np.nonzero((d < radius) & (np.arange(n) > i))[0]:
+            edges[(i, int(j))] = 1.0 / (d[j] + 1e-3)
+    w = rng.random(n) + 0.1 if weighted_nodes else None
+    return Graph.from_edges(n, edges, w), pos
+
+
+def test_partition_basic_quality():
+    g, pos = random_geometric_graph(300, 0.15, seed=0)
+    res = partition_graph(g, 4, seed=0)
+    assert res.nparts == 4
+    assert len(res.assignment) == g.n
+    assert set(np.unique(res.assignment)) <= set(range(4))
+    assert res.imbalance < 1.3
+
+
+def test_partition_beats_geometric_on_clustered():
+    """The paper's claim: work-partitioning beats geometric cuts on
+    clustered inputs."""
+    rng = np.random.default_rng(3)
+    # two dense clusters + sparse background
+    a = rng.normal(0.25, 0.03, (150, 3))
+    b = rng.normal(0.75, 0.03, (150, 3))
+    bg = rng.random((100, 3))
+    pos = np.clip(np.concatenate([a, b, bg]), 0, 1)
+    edges = {}
+    for i in range(len(pos)):
+        d = np.linalg.norm(pos - pos[i], axis=1)
+        for j in np.nonzero((d < 0.1) & (np.arange(len(pos)) > i))[0]:
+            edges[(i, int(j))] = 1.0
+    g = Graph.from_edges(len(pos), edges)
+    ours = partition_graph(g, 8, seed=0)
+    geo = evaluate(g, partition_geometric(pos, 8), 8)
+    assert ours.part_loads.max() <= geo.part_loads.max() * 1.05
+
+
+def test_determinism():
+    g, _ = random_geometric_graph(200, 0.15, seed=1)
+    r1 = partition_graph(g, 4, seed=7)
+    r2 = partition_graph(g, 4, seed=7)
+    assert np.array_equal(r1.assignment, r2.assignment)
+
+
+def test_edge_cases():
+    g, _ = random_geometric_graph(20, 0.3, seed=2)
+    r1 = partition_graph(g, 1)
+    assert r1.edge_cut == 0 and set(np.unique(r1.assignment)) == {0}
+    rn = partition_graph(g, 50)      # more parts than nodes
+    assert len(rn.assignment) == 20
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 120), st.integers(2, 8), st.integers(0, 5))
+def test_partition_invariants(n, k, seed):
+    """Properties: every vertex assigned; balance bound respected for
+    connected-ish graphs; cut equals recomputed cut."""
+    g, _ = random_geometric_graph(n, 0.35, seed=seed, weighted_nodes=True)
+    res = partition_graph(g, k, seed=seed, max_imbalance=1.10)
+    assert len(res.assignment) == n
+    assert (res.assignment >= 0).all() and (res.assignment < k).all()
+    again = evaluate(g, res.assignment, k)
+    assert np.isclose(again.edge_cut, res.edge_cut)
+    assert np.allclose(again.part_loads, res.part_loads)
+
+
+def test_node_weight_balance():
+    """Heavily skewed node weights must still balance work."""
+    rng = np.random.default_rng(0)
+    n = 200
+    w = np.ones(n)
+    w[:10] = 50.0                     # few very expensive cells (clustered IC)
+    edges = {(i, (i + 1) % n): 1.0 for i in range(n)}
+    g = Graph.from_edges(n, edges, w)
+    res = partition_graph(g, 4, seed=0)
+    assert res.imbalance < 1.6

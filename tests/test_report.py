@@ -1,0 +1,34 @@
+"""Report generator over the committed dry-run artifacts."""
+
+import os
+
+import pytest
+
+from repro.analysis.report import (advice_list, load_cells, markdown_table,
+                                   rebuild_roofline)
+
+V0 = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "results",
+                  "dryrun_v0")
+
+
+@pytest.mark.skipif(not os.path.isdir(V0), reason="no archived dry-run")
+def test_v0_artifacts_load_and_rebuild():
+    cells = load_cells(V0)
+    assert len(cells) >= 70
+    ok = [c for c in cells if c.get("status") == "ok"]
+    assert len(ok) >= 60
+    for c in ok:
+        r = rebuild_roofline(c)
+        assert r is not None
+        assert r.t_compute > 0 and r.t_memory > 0
+        assert r.bottleneck in ("compute", "memory", "collective")
+        assert 0 <= r.roofline_fraction <= 1.0 + 1e-9
+
+
+@pytest.mark.skipif(not os.path.isdir(V0), reason="no archived dry-run")
+def test_markdown_table_renders():
+    md = markdown_table(V0, mesh="single")
+    assert md.count("|") > 100
+    assert "bound" in md.splitlines()[0]
+    adv = advice_list(V0, mesh="single")
+    assert "bound" in adv

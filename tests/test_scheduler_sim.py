@@ -1,0 +1,75 @@
+"""Discrete-event executor simulation: async vs bulk-synchronous."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AsyncExecutorSim, TaskGraph, decompose_with_comm,
+                        makespan_lower_bound, wave_schedule)
+
+
+def build_ring(ncells=16, cost_skew=False):
+    g = TaskGraph()
+    rng = np.random.default_rng(0)
+    sort, ghost, kick = [], [], []
+    for c in range(ncells):
+        k = 5.0 if (cost_skew and c < 2) else 1.0
+        sort.append(g.add_task("sort", resources=(c,), writes=(c,), cost=k))
+        ghost.append(g.add_task("ghost", resources=(c,), writes=(c,),
+                                cost=0.5 * k))
+        kick.append(g.add_task("kick", resources=(c,), writes=(c,),
+                               cost=0.5 * k))
+    for c in range(ncells):
+        nxt = (c + 1) % ncells
+        k = 5.0 if (cost_skew and c < 2) else 2.0
+        d = g.add_task("density_pair", resources=(c, nxt), writes=(c, nxt),
+                       cost=k)
+        f = g.add_task("force_pair", resources=(c, nxt), writes=(c, nxt),
+                       cost=k)
+        for r in (c, nxt):
+            g.add_dependency(d, sort[r])
+            g.add_dependency(ghost[r], d)
+            g.add_dependency(f, ghost[r])
+            g.add_dependency(kick[r], f)
+    return g
+
+
+def _distribute(g, ncells, ranks):
+    dist, dec = decompose_with_comm(
+        g, ncells, ranks, cell_bytes=[6000.0] * ncells,
+        phases={"sort": "p0", "density_pair": "p1", "ghost": "p2",
+                "force_pair": "p3", "kick": "p4"})
+    return dist
+
+
+def test_async_beats_sync_with_latency():
+    g = _distribute(build_ring(16), 16, 4)
+    kw = dict(ranks=4, threads=2, latency=0.5, bandwidth=1e6)
+    r_async = AsyncExecutorSim(g, **kw).run()
+    r_sync = AsyncExecutorSim(g, synchronous=True, **kw).run()
+    assert r_async.makespan < r_sync.makespan
+    assert 0 < r_async.efficiency <= 1.0
+    assert 0 < r_sync.efficiency <= 1.0
+
+
+def test_all_tasks_complete_and_messages_counted():
+    g = _distribute(build_ring(12), 12, 3)
+    r = AsyncExecutorSim(g, ranks=3, threads=1).run()
+    n_send = sum(1 for t in g.tasks.values() if t.kind == "send")
+    assert r.messages == n_send
+    assert r.message_bytes == pytest.approx(n_send * 6000.0)
+
+
+def test_makespan_at_least_lower_bound():
+    g = _distribute(build_ring(16, cost_skew=True), 16, 4)
+    r = AsyncExecutorSim(g, ranks=4, threads=2, latency=0.0,
+                         bandwidth=1e12).run()
+    # Graham bound over compute tasks only (sends ~free here)
+    lb = max(t.cost for t in g.tasks.values())
+    assert r.makespan >= lb
+
+
+def test_more_threads_never_slower():
+    g = _distribute(build_ring(16), 16, 2)
+    m1 = AsyncExecutorSim(g, ranks=2, threads=1).run().makespan
+    m4 = AsyncExecutorSim(g, ranks=2, threads=4).run().makespan
+    assert m4 <= m1 + 1e-9

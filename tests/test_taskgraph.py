@@ -1,0 +1,121 @@
+"""Task graph: dependencies, conflicts, wave schedules (paper §3.1)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (TaskGraph, TaskGraphError, balance_wave,
+                        makespan_lower_bound, wave_schedule)
+
+
+def build_sph_like(ncells=6):
+    """sort → density(pair) → ghost → force(pair) → kick over a cell ring."""
+    g = TaskGraph()
+    sort = [g.add_task("sort", resources=(c,), writes=(c,), cost=1)
+            for c in range(ncells)]
+    ghost = [g.add_task("ghost", resources=(c,), writes=(c,), cost=0.5)
+             for c in range(ncells)]
+    kick = [g.add_task("kick", resources=(c,), writes=(c,), cost=0.5)
+            for c in range(ncells)]
+    for c in range(ncells):
+        nxt = (c + 1) % ncells
+        d = g.add_task("density_pair", resources=(c, nxt), writes=(c, nxt),
+                       cost=2)
+        f = g.add_task("force_pair", resources=(c, nxt), writes=(c, nxt),
+                       cost=2)
+        for r in (c, nxt):
+            g.add_dependency(d, sort[r])
+            g.add_dependency(ghost[r], d)
+            g.add_dependency(f, ghost[r])
+            g.add_dependency(kick[r], f)
+    return g
+
+
+def test_toposort_and_cycle_detection():
+    g = TaskGraph()
+    a = g.add_task("a")
+    b = g.add_task("b")
+    g.add_dependency(b, a)
+    assert g.toposort() == [a, b]
+    g.add_dependency(a, b)
+    with pytest.raises(TaskGraphError):
+        g.toposort()
+
+
+def test_self_dependency_rejected():
+    g = TaskGraph()
+    a = g.add_task("a")
+    with pytest.raises(TaskGraphError):
+        g.add_dependency(a, a)
+
+
+def test_writes_must_be_resources():
+    g = TaskGraph()
+    with pytest.raises(TaskGraphError):
+        g.add_task("bad", resources=(1,), writes=(2,))
+
+
+def test_auto_conflicts_and_wave_validity():
+    g = build_sph_like(6)
+    added = g.auto_conflicts()
+    assert added > 0          # ring pair tasks sharing cells conflict
+    waves = wave_schedule(g)
+    g.validate_schedule(waves)    # raises on any violation
+    # per-wave kinds homogeneous (batched-op lowering requirement)
+    for w in waves:
+        kinds = {g.tasks[t].kind for t in w}
+        assert len(kinds) == 1
+
+
+def test_wave_order_matches_sph_phases():
+    g = build_sph_like(4)
+    g.auto_conflicts()
+    waves = wave_schedule(g)
+    first = {}
+    for i, w in enumerate(waves):
+        k = g.tasks[w[0]].kind
+        first.setdefault(k, i)
+    assert first["sort"] < first["density_pair"] < first["ghost"] \
+        < first["force_pair"] < first["kick"]
+
+
+def test_critical_path_bounds_makespan():
+    g = build_sph_like(5)
+    cp, path = g.critical_path()
+    assert cp > 0 and len(path) >= 5
+    lb = makespan_lower_bound(g, workers=4)
+    assert lb >= cp / 10      # sanity: non-degenerate
+
+
+def test_cell_graph_projection():
+    g = build_sph_like(4)
+    nodes, edges = g.cell_graph()
+    assert set(nodes) == set(range(4))
+    assert all(w > 0 for w in nodes.values())
+    # ring topology: 4 edges
+    assert len(edges) == 4
+
+
+def test_balance_wave_lpt():
+    costs = [10, 1, 1, 1, 9, 2]
+    bins = balance_wave(costs, 2)
+    loads = [sum(costs[i] for i in b) for b in bins]
+    assert max(loads) <= 14   # LPT bound ≤ 4/3 OPT (OPT=12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 60), st.data())
+def test_wave_schedule_random_dags(n, extra_edges, data):
+    """Property: wave_schedule is valid for arbitrary DAGs + conflicts."""
+    g = TaskGraph()
+    ids = [g.add_task(f"k{i % 3}", resources=(i % 5,), writes=(i % 5,),
+                      cost=1 + (i % 4)) for i in range(n)]
+    for _ in range(extra_edges):
+        a = data.draw(st.integers(0, n - 1))
+        b = data.draw(st.integers(0, n - 1))
+        if a < b:
+            g.add_dependency(ids[b], ids[a])   # edges forward only: acyclic
+    g.auto_conflicts()
+    waves = wave_schedule(g)
+    g.validate_schedule(waves)
+    assert sum(len(w) for w in waves) == n
