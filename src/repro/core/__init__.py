@@ -10,12 +10,15 @@ from .scheduler import (AsyncExecutorSim, SimResult, balance_wave,
                         makespan_lower_bound, wave_schedule)
 from .partition import (Graph, PartitionResult, evaluate, partition_geometric,
                         partition_graph)
-from .cost_model import (CostModel, LayerCost, attention_cost, mamba_cost,
-                         mlp_cost, moe_cost, model_flops_2nd, model_flops_6nd)
+from .cost_model import (CostModel, LayerCost, attention_cost,
+                         cell_activation_frequency, mamba_cost, mlp_cost,
+                         moe_cost, model_flops_2nd, model_flops_6nd,
+                         timebin_frequency)
 from .comm_planner import (CommStats, HaloPlan, insert_comm_tasks,
                            pairwise_stats_from_partition, plan_halo_1d)
 from .decompose import (Decomposition, assign_tasks, decompose_cells,
-                        decompose_layers, decompose_with_comm)
+                        decompose_layers, decompose_with_comm,
+                        timebin_node_weights)
 
 __all__ = [
     "Task", "TaskGraph", "TaskGraphError",
@@ -23,10 +26,11 @@ __all__ = [
     "wave_schedule",
     "Graph", "PartitionResult", "evaluate", "partition_geometric",
     "partition_graph",
-    "CostModel", "LayerCost", "attention_cost", "mamba_cost", "mlp_cost",
-    "moe_cost", "model_flops_2nd", "model_flops_6nd",
+    "CostModel", "LayerCost", "attention_cost", "cell_activation_frequency",
+    "mamba_cost", "mlp_cost", "moe_cost", "model_flops_2nd",
+    "model_flops_6nd", "timebin_frequency",
     "CommStats", "HaloPlan", "insert_comm_tasks",
     "pairwise_stats_from_partition", "plan_halo_1d",
     "Decomposition", "assign_tasks", "decompose_cells", "decompose_layers",
-    "decompose_with_comm",
+    "decompose_with_comm", "timebin_node_weights",
 ]

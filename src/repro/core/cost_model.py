@@ -34,12 +34,36 @@ _SPH_ASYMPTOTIC: Dict[str, Callable[..., float]] = {
 }
 
 
+def timebin_frequency(bin_idx: int, max_bin: int) -> float:
+    """Fraction of the finest sub-steps on which bin ``bin_idx`` is active.
+
+    Bin b steps with dt = dt_max / 2**b, so over one dt_max cycle of
+    2**max_bin sub-steps it is integrated 2**b times: frequency 2**(b−d).
+    """
+    return 2.0 ** (min(int(bin_idx), int(max_bin)) - int(max_bin))
+
+
+def cell_activation_frequency(occ_by_bin, max_bin: int) -> float:
+    """Fraction of sub-steps on which a cell has *anything* due.
+
+    A cell wakes whenever its deepest-bin (smallest-dt) particle does, so
+    the frequency is that of the highest occupied bin; an empty cell never
+    wakes.
+    """
+    occupied = [b for b, o in enumerate(occ_by_bin) if o > 0]
+    if not occupied:
+        return 0.0
+    return timebin_frequency(max(occupied), max_bin)
+
+
 @dataclass
 class CostModel:
     """Per-task-type cost = rate[type] * asymptotic(type, sizes).
 
     ``update`` folds in a measured execution time with an EMA — the paper's
     measured-cost refinement. Rates are in seconds per asymptotic unit.
+    ``timebin_units`` is the time-averaged variant used when particles sit
+    in a hierarchy of time bins (see ``sph/timebins.py``).
     """
 
     rates: Dict[str, float] = field(default_factory=dict)
@@ -56,6 +80,37 @@ class CostModel:
 
     def cost(self, kind: str, n: int, m: int = 0) -> float:
         return self.rates.get(kind, self.default_rate) * self.units(kind, n, m)
+
+    # --------------------------------------------------- time-bin weighting
+    def timebin_units(self, kind: str, occ_by_bin, occ_by_bin_j=None, *,
+                      max_bin: Optional[int] = None) -> float:
+        """Time-averaged cost units of a task under the bin hierarchy.
+
+        ``occ_by_bin`` is the per-bin occupancy histogram of the task's cell
+        (bin b holds particles stepped with dt_max/2**b, so bin b is active
+        a fraction 2**(b - max_bin) of the finest sub-steps). Per-particle
+        tasks (ghost/kick/sort) cost the *sum over bins of occupancy scaled
+        by each bin's activity fraction* — every particle pays at its own
+        cadence. Interaction tasks (density/force, self and pair) evaluate
+        the full block whenever the cell — for pairs: either cell — has
+        anything due, so they pay the full asymptotic cost at the *cell's*
+        activation frequency. This is the per-task weight that makes the
+        domain decomposition balance what actually runs, extending the
+        paper's "work, not data" principle along the time axis.
+        """
+        occ = [float(x) for x in occ_by_bin]
+        d = int(max_bin) if max_bin is not None else max(len(occ) - 1, 0)
+        n_tot = int(sum(occ))
+        if kind in ("sort", "ghost", "kick", "send", "recv"):
+            # linear-ish per-particle work: each bin pays at its cadence
+            n_eff = sum(o * timebin_frequency(b, d) for b, o in enumerate(occ))
+            return self.units(kind, n_tot) * n_eff / max(n_tot, 1)
+        freq = cell_activation_frequency(occ, d)
+        if occ_by_bin_j is not None:
+            occ_j = [float(x) for x in occ_by_bin_j]
+            freq = max(freq, cell_activation_frequency(occ_j, d))
+            return freq * self.units(kind, n_tot, int(sum(occ_j)))
+        return freq * self.units(kind, n_tot)
 
     def update(self, kind: str, n: int, m: int, measured_seconds: float) -> None:
         u = self.units(kind, n, m)

@@ -37,16 +37,47 @@ class Decomposition:
         return self.partition.nparts
 
 
+def timebin_node_weights(occupancy_by_bin: np.ndarray) -> np.ndarray:
+    """Per-cell time-averaged work: Σ_b occ[c, b] · 2**(b − max_bin).
+
+    ``occupancy_by_bin`` is (ncells, nbins) with bin b holding particles
+    stepped at dt_max/2**b. A bin-b particle is integrated on a fraction
+    2**(b − d) of the finest sub-steps, so this weight measures updates
+    actually performed per sub-step — the quantity the partitioner must
+    balance under hierarchical time-stepping (the paper's "work, not data"
+    extended along the time axis).
+    """
+    occ = np.asarray(occupancy_by_bin, dtype=np.float64)
+    if occ.ndim != 2:
+        raise ValueError("occupancy_by_bin must be (ncells, nbins)")
+    d = occ.shape[1] - 1
+    freq = 2.0 ** (np.arange(occ.shape[1]) - d)
+    return occ @ freq
+
+
 def decompose_cells(graph: TaskGraph, num_cells: int, nranks: int, *,
                     seed: int = 0, max_imbalance: float = 1.05,
-                    cell_bytes: Optional[Sequence[float]] = None
+                    cell_bytes: Optional[Sequence[float]] = None,
+                    node_weights: Optional[Sequence[float]] = None
                     ) -> Decomposition:
-    """Partition the computation (not just the data): SWIFT §3.2."""
+    """Partition the computation (not just the data): SWIFT §3.2.
+
+    ``node_weights`` overrides the cell weights projected from the task
+    graph — used with :func:`timebin_node_weights` to balance the
+    *time-averaged* active work when particles carry per-particle
+    time-steps (a graph built with ``time_average=True`` already carries
+    these weights in its task costs, in which case no override is needed).
+    """
     node_w, edge_w = graph.cell_graph()
     vw = np.zeros(num_cells)
     for r, w in node_w.items():
         if r < num_cells:
             vw[r] = w
+    if node_weights is not None:
+        vw = np.asarray(node_weights, dtype=np.float64).copy()
+        if len(vw) != num_cells:
+            raise ValueError(
+                f"node_weights has {len(vw)} entries for {num_cells} cells")
     vw = np.maximum(vw, 1e-12)      # empty cells still need a home
     edges = {(u, v): w for (u, v), w in edge_w.items()
              if u < num_cells and v < num_cells}

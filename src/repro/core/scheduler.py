@@ -24,7 +24,8 @@ from .taskgraph import TaskGraph
 
 
 # --------------------------------------------------------------------- waves
-def wave_schedule(graph: TaskGraph, *, by_kind: bool = True) -> List[List[int]]:
+def wave_schedule(graph: TaskGraph, *, by_kind: bool = True,
+                  active_only: bool = False) -> List[List[int]]:
     """Greedy maximal conflict-free antichain decomposition.
 
     Repeatedly take every task whose dependencies are all satisfied, then
@@ -34,7 +35,14 @@ def wave_schedule(graph: TaskGraph, *, by_kind: bool = True) -> List[List[int]]:
 
     With ``by_kind`` the ready set is additionally split per task kind so
     each wave lowers to a single homogeneous batched op.
+
+    With ``active_only`` the schedule covers only tasks whose activation
+    mask is set (hierarchical time-stepping: inactive tasks have nothing
+    due at the current bin level). Dependencies on inactive tasks count as
+    satisfied; the returned waves never contain an inactive task.
     """
+    if active_only:
+        graph = graph.active_subgraph()
     indeg = {tid: len(graph.dependencies(tid)) for tid in graph.tasks}
     ready = {tid for tid, d in indeg.items() if d == 0}
     waves: List[List[int]] = []
@@ -128,7 +136,11 @@ class AsyncExecutorSim:
     def __init__(self, graph: TaskGraph, *, ranks: int, threads: int = 1,
                  latency: float = 1e-6, bandwidth: float = 5e9,
                  send_overhead: float = 5e-7, synchronous: bool = False,
-                 record_timeline: bool = False):
+                 record_timeline: bool = False, active_only: bool = False):
+        if active_only:
+            # hierarchical time-stepping: simulate only the tasks that are
+            # due at the current bin level (inactive deps pre-satisfied)
+            graph = graph.active_subgraph()
         self.g = graph
         self.ranks = ranks
         self.threads = threads

@@ -42,6 +42,10 @@ class Task:
     cost:       estimated execution cost (arbitrary units; see cost_model).
     rank:       partition / rank the task is assigned to (-1 = unassigned).
     payload:    opaque metadata (e.g. cell indices for a pair task).
+    active:     activation mask for hierarchical time-stepping: a task whose
+                cells contain no particle due at the current time-bin level
+                is *inactive* and is skipped by the wave scheduler and the
+                executor simulation (see ``sph/timebins.py``).
     """
 
     tid: int
@@ -51,6 +55,7 @@ class Task:
     cost: float = 1.0
     rank: int = -1
     payload: tuple = ()
+    active: bool = True
 
     def __post_init__(self):
         for w in self.writes:
@@ -74,13 +79,15 @@ class TaskGraph:
     # ------------------------------------------------------------------ build
     def add_task(self, kind: str, *, resources: Sequence[int] = (),
                  writes: Sequence[int] = (), cost: float = 1.0,
-                 rank: int = -1, payload: tuple = ()) -> int:
+                 rank: int = -1, payload: tuple = (),
+                 active: bool = True) -> int:
         tid = self._next_id
         self._next_id += 1
         self.tasks[tid] = Task(tid=tid, kind=kind,
                                resources=tuple(resources),
                                writes=tuple(writes), cost=float(cost),
-                               rank=rank, payload=tuple(payload))
+                               rank=rank, payload=tuple(payload),
+                               active=bool(active))
         return tid
 
     def add_dependency(self, task: int, depends_on: int) -> None:
@@ -147,6 +154,52 @@ class TaskGraph:
     def _check(self, tid: int) -> None:
         if tid not in self.tasks:
             raise TaskGraphError(f"unknown task id {tid}")
+
+    # ----------------------------------------------------- activity masking
+    def active_tasks(self) -> FrozenSet[int]:
+        """Ids of tasks whose activation mask is set."""
+        return frozenset(t.tid for t in self.tasks.values() if t.active)
+
+    def set_active(self, predicate: Callable[["Task"], bool]) -> int:
+        """Recompute every task's activation flag; returns #active.
+
+        Used by the time-bin hierarchy: at sub-step level L only tasks whose
+        cells hold particles in bins ≥ L are due, everything else is skipped
+        by the scheduler (SWIFT runs "only the work that is due").
+        """
+        n = 0
+        for tid, t in list(self.tasks.items()):
+            a = bool(predicate(t))
+            n += a
+            if a != t.active:
+                self.tasks[tid] = Task(tid=t.tid, kind=t.kind,
+                                       resources=t.resources, writes=t.writes,
+                                       cost=t.cost, rank=t.rank,
+                                       payload=t.payload, active=a)
+        return n
+
+    def active_subgraph(self) -> "TaskGraph":
+        """Project onto the active tasks (same task ids).
+
+        Dependencies on inactive tasks are treated as already satisfied —
+        an inactive density task belongs to a cell with nothing due, so the
+        ghost/force chain of an *active* neighbour must not wait on it.
+        Conflicts between two active tasks are preserved.
+        """
+        keep = {tid for tid, t in self.tasks.items() if t.active}
+        g = TaskGraph()
+        g.tasks = {tid: self.tasks[tid] for tid in keep}
+        g._next_id = self._next_id
+        for tid in keep:
+            deps = {d for d in self._dependencies.get(tid, ()) if d in keep}
+            if deps:
+                g._dependencies[tid] = deps
+                for d in deps:
+                    g._dependents[d].add(tid)
+            confl = {c for c in self._conflicts.get(tid, ()) if c in keep}
+            if confl:
+                g._conflicts[tid] = confl
+        return g
 
     # ---------------------------------------------------------------- orders
     def toposort(self) -> List[int]:

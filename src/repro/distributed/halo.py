@@ -19,7 +19,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 

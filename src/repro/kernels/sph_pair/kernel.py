@@ -36,8 +36,59 @@ from ...sph.smoothing import get_kernel
 EPS = 1e-12
 
 
+def _two_sum(a, b):
+    """Error-free f32 addition: returns (fl(a+b), rounding error)."""
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def _two_prod(a, b):
+    """Error-free f32 product via Dekker splitting (no FMA needed)."""
+    p = a * b
+    split = 4097.0          # 2**12 + 1 for float32 (24-bit significand)
+    ca = split * a
+    a_hi = ca - (ca - a)
+    a_lo = a - a_hi
+    cb = split * b
+    b_hi = cb - (cb - b)
+    b_lo = b - b_hi
+    err = ((a_hi * b_hi - p) + a_hi * b_lo + a_lo * b_hi) + a_lo * b_lo
+    return p, err
+
+
+def _df_weighted_contract(w, g, rhat, axis):
+    """Σ_axis w·g·r̂ in double-float precision, rounded once at the end.
+
+    ``w`` broadcasts against the (C, C) matrix ``g``; ``rhat`` is (C, C, 3).
+    Both directions of a pair task contract the *same* g and r̂ matrices, so
+    computing the products and the reduction in double-float makes the pair's
+    momentum exchange antisymmetric to the final-rounding floor — Newton's
+    third law holds to ~1 ulp of each dv entry instead of drifting with the
+    length of the f32 product/reduction chain.
+    """
+    p1, e1 = _two_prod(jnp.broadcast_to(w, g.shape), g)
+    p2, e2 = _two_prod(p1[:, :, None], rhat)
+    lo = e2 + e1[:, :, None] * rhat
+    hi = jnp.moveaxis(p2, axis, 0)
+    lo = jnp.moveaxis(lo, axis, 0)
+
+    def body(k, carry):
+        s_hi, s_lo = carry
+        s, e = _two_sum(s_hi, hi[k])
+        e = e + (s_lo + lo[k])
+        s2 = s + e                      # renormalise the pair
+        return s2, e - (s2 - s)
+
+    init = (jnp.zeros_like(hi[0]), jnp.zeros_like(lo[0]))
+    s_hi, s_lo = jax.lax.fori_loop(0, hi.shape[0], body, init)
+    return s_hi + s_lo
+
+
 def _r_and_rhat(xi, xj):
-    """(C,C) distances and (C,C,3) unit displacement via the MXU dot form."""
+    """(C,C) distances, (C,C,3) displacement and unit displacement via the
+    MXU dot form."""
     sq_i = jnp.sum(xi * xi, axis=-1)
     sq_j = jnp.sum(xj * xj, axis=-1)
     cross = jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
@@ -45,7 +96,7 @@ def _r_and_rhat(xi, xj):
     r = jnp.sqrt(r2 + EPS)
     dx = xi[:, None, :] - xj[None, :, :]
     rhat = dx / r[:, :, None]
-    return r2, r, rhat
+    return r2, r, dx, rhat
 
 
 # ------------------------------------------------------------------ density
@@ -59,7 +110,7 @@ def _density_kernel(pos_i_ref, h_i_ref, m_i_ref, mask_i_ref,
     xj = pos_j_ref[0]
     hi = h_i_ref[0][:, None]   # (C, 1)
     hj = h_j_ref[0][None, :]   # (1, C)
-    _r2, r, _rhat = _r_and_rhat(xi, xj)
+    _r2, r, _dx, _rhat = _r_and_rhat(xi, xj)
 
     # i <- j (rows reduce over j)
     wi = w_fn(r, hi)
@@ -114,7 +165,7 @@ def _force_kernel(pos_i_ref, vel_i_ref, h_i_ref, P_i_ref, rho_i_ref,
     vi, vj = vel_i_ref[0], vel_j_ref[0]
     hi = h_i_ref[0][:, None]
     hj = h_j_ref[0][None, :]
-    r2, r, rhat = _r_and_rhat(xi, xj)
+    r2, r, dx, rhat = _r_and_rhat(xi, xj)
 
     dwi = dwdr_fn(r, hi)
     dwj = dwdr_fn(r, hj)
@@ -131,27 +182,32 @@ def _force_kernel(pos_i_ref, vel_i_ref, h_i_ref, P_i_ref, rho_i_ref,
     du_visc_i = jnp.zeros(xi.shape[0], dtype=xi.dtype)
     du_visc_j = jnp.zeros(xj.shape[0], dtype=xj.dtype)
     if alpha_visc > 0.0:
-        vdotr = vdotrhat * r
+        # match physics.force_block's rounding path exactly (vdotr from dx,
+        # not vdotrhat*r) so the fused kernel keeps Newton's third law to
+        # the same ulp as the two-sided reference
+        vdotr = jnp.sum(dvel * dx, axis=-1)
         hbar = 0.5 * (hi + hj)
         rhobar = 0.5 * (rho_i_ref[0][:, None] + rho_j_ref[0][None, :])
         csbar = 0.5 * (cs_i_ref[0][:, None] + cs_j_ref[0][None, :])
         mu = hbar * vdotr / (r2 + 0.01 * hbar * hbar)
         mu = jnp.where(vdotr < 0.0, mu, 0.0)
-        piij = (-alpha_visc * csbar * mu
-                + 2.0 * alpha_visc * mu * mu) / rhobar
+        beta = 2.0 * alpha_visc
+        piij = (-alpha_visc * csbar * mu + beta * mu * mu) / rhobar
         dwbar = 0.5 * (dwi + dwj)
         fmag = fmag + piij * dwbar
-        heat = piij * dwbar * vdotrhat          # (C, C), symmetric
-        du_visc_i = 0.5 * jnp.sum(m_j_ref[0][None, :] * valid * heat, axis=1)
-        du_visc_j = 0.5 * jnp.sum(m_i_ref[0][:, None] * valid * heat, axis=0)
+        mvisc_i = m_j_ref[0][None, :] * valid
+        du_visc_i = 0.5 * jnp.sum(
+            mvisc_i * piij * dwbar * (vdotr / r), axis=1)
+        mvisc_j = (m_i_ref[0][:, None] * valid).T
+        du_visc_j = 0.5 * jnp.sum(
+            mvisc_j * piij.T * dwbar.T * (vdotr.T / r.T), axis=1)
 
-    fmag = jnp.where(valid > 0, fmag, 0.0)
-    # i-side: row reductions
-    mj = m_j_ref[0][None, :] * valid
-    dv_i_ref[0] = -jnp.sum((mj * fmag)[:, :, None] * rhat, axis=1)
-    # j-side: column reductions; r̂_ji = −r̂_ij
-    mi = m_i_ref[0][:, None] * valid
-    dv_j_ref[0] = jnp.sum((mi * fmag)[:, :, None] * rhat, axis=0)
+    # Both directions contract the *same* (C, C) interaction matrix against
+    # the same r̂, in double-float, so the pair's momentum exchange is
+    # antisymmetric to the output-rounding floor (Newton's third law).
+    g = jnp.where(valid > 0, fmag, 0.0) * valid
+    dv_i_ref[0] = -_df_weighted_contract(m_j_ref[0][None, :], g, rhat, axis=1)
+    dv_j_ref[0] = _df_weighted_contract(m_i_ref[0][:, None], g, rhat, axis=0)
 
     # energy eq. (4): per-side cutoff r < h_side
     valid_ui = mask_j_ref[0][None, :] * (r < hi) * (r2 > EPS)

@@ -25,8 +25,12 @@ def _gather(cells, pairs):
 
 
 def density_pairs(cells, pairs, *, kernel: str = "cubic",
-                  interpret: bool = True):
-    """All density_pair/density_self tasks → (rho, drho_dh, nngb)."""
+                  interpret: bool = True, pair_mask=None):
+    """All density_pair/density_self tasks → (rho, drho_dh, nngb).
+
+    ``pair_mask`` (npairs,) zeroes masked pair tasks' contributions (padding
+    used by the time-bin engine's fixed-shape level pair lists).
+    """
     gi, gj, pos_i, pos_j = _gather(cells, pairs)
     rho_i, drho_i, nn_i, rho_j, drho_j, nn_j = density_pair_pallas(
         pos_i, gi(cells.h), gi(cells.mass), gi(cells.mask),
@@ -35,11 +39,12 @@ def density_pairs(cells, pairs, *, kernel: str = "cubic",
 
     ncells, cap = cells.mass.shape
     notself = (pairs.ci != pairs.cj).astype(cells.pos.dtype)[:, None]
+    live = jnp.ones_like(notself) if pair_mask is None else pair_mask[:, None]
 
     def scatter(a_ij, a_ji):
         out = jnp.zeros((ncells, cap), cells.pos.dtype)
-        out = out.at[pairs.ci].add(a_ij)
-        out = out.at[pairs.cj].add(a_ji * notself)
+        out = out.at[pairs.ci].add(a_ij * live)
+        out = out.at[pairs.cj].add(a_ji * notself * live)
         return out
 
     return (scatter(rho_i, rho_j), scatter(drho_i, drho_j),
@@ -48,7 +53,7 @@ def density_pairs(cells, pairs, *, kernel: str = "cubic",
 
 def force_pairs(cells, pairs, rho, press, omega, cs, *,
                 kernel: str = "cubic", alpha_visc: float = 0.0,
-                interpret: bool = True):
+                interpret: bool = True, pair_mask=None):
     """All force_pair/force_self tasks → (dv, du)."""
     gi, gj, pos_i, pos_j = _gather(cells, pairs)
     dv_i, du_i, dv_j, du_j = force_pair_pallas(
@@ -60,11 +65,12 @@ def force_pairs(cells, pairs, rho, press, omega, cs, *,
 
     ncells, cap = cells.mass.shape
     notself = (pairs.ci != pairs.cj).astype(cells.pos.dtype)
+    live = jnp.ones_like(notself) if pair_mask is None else pair_mask
 
     dv = jnp.zeros((ncells, cap, 3), cells.pos.dtype)
-    dv = dv.at[pairs.ci].add(dv_i)
-    dv = dv.at[pairs.cj].add(dv_j * notself[:, None, None])
+    dv = dv.at[pairs.ci].add(dv_i * live[:, None, None])
+    dv = dv.at[pairs.cj].add(dv_j * (notself * live)[:, None, None])
     du = jnp.zeros((ncells, cap), cells.pos.dtype)
-    du = du.at[pairs.ci].add(du_i)
-    du = du.at[pairs.cj].add(du_j * notself[:, None])
+    du = du.at[pairs.ci].add(du_i * live[:, None])
+    du = du.at[pairs.cj].add(du_j * (notself * live)[:, None])
     return dv, du

@@ -4,18 +4,25 @@ from .cellgrid import (GridSpec, PairList, ParticleCells, bin_particles,
                        build_pair_list, choose_grid, unbin)
 from .engine import (SPHConfig, SPHState, Simulation, build_taskgraph,
                      cfl_timestep, compute_accelerations, init_state, step)
-from .ic import clustered_ic, uniform_ic
-from .physics import (GAMMA, density_block, eos_pressure, force_block,
-                      ghost_update, smoothing_length_update, sound_speed)
+from .engine import cfl_timestep_particles
+from .ic import clustered_ic, sedov_ic, uniform_ic
+from .physics import (GAMMA, cfl_timestep_block, density_block, eos_pressure,
+                      force_block, ghost_update, smoothing_length_update,
+                      sound_speed)
 from .smoothing import dw_dh, get_kernel, w_cubic, w_wendland_c2
+from .timebins import (TimeBinSimulation, TimeBinState, active_level,
+                       assign_bins, bin_timestep, cell_bin_histogram,
+                       cell_max_bins, timebin_init)
 
 __all__ = [
     "GridSpec", "PairList", "ParticleCells", "bin_particles",
     "build_pair_list", "choose_grid", "unbin",
     "SPHConfig", "SPHState", "Simulation", "build_taskgraph", "cfl_timestep",
-    "compute_accelerations", "init_state", "step",
-    "clustered_ic", "uniform_ic",
-    "GAMMA", "density_block", "eos_pressure", "force_block", "ghost_update",
-    "smoothing_length_update", "sound_speed",
+    "cfl_timestep_particles", "compute_accelerations", "init_state", "step",
+    "clustered_ic", "sedov_ic", "uniform_ic",
+    "GAMMA", "cfl_timestep_block", "density_block", "eos_pressure",
+    "force_block", "ghost_update", "smoothing_length_update", "sound_speed",
     "dw_dh", "get_kernel", "w_cubic", "w_wendland_c2",
+    "TimeBinSimulation", "TimeBinState", "active_level", "assign_bins",
+    "bin_timestep", "cell_bin_histogram", "cell_max_bins", "timebin_init",
 ]

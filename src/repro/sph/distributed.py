@@ -32,7 +32,7 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core import CostModel, decompose_cells

@@ -26,8 +26,8 @@ import jax.numpy as jnp
 from ..core import CostModel, TaskGraph
 from .cellgrid import GridSpec, PairList, ParticleCells, bin_particles, \
     build_pair_list, choose_grid, unbin
-from .physics import GAMMA, DensityResult, ForceResult, density_block, \
-    force_block, ghost_update, smoothing_length_update
+from .physics import GAMMA, DensityResult, ForceResult, cfl_timestep_block, \
+    density_block, force_block, ghost_update, smoothing_length_update
 from .smoothing import get_kernel
 
 
@@ -51,11 +51,18 @@ class SPHConfig:
 
 
 # --------------------------------------------------------------- wave passes
-def _density_pass(cells: ParticleCells, pairs: PairList, cfg: SPHConfig):
-    """All density_self/density_pair tasks as two batched ops."""
+def _density_pass(cells: ParticleCells, pairs: PairList, cfg: SPHConfig,
+                  pair_mask: Optional[jax.Array] = None):
+    """All density_self/density_pair tasks as two batched ops.
+
+    ``pair_mask`` (npairs,) zeroes the contributions of masked pair tasks —
+    used by the time-bin engine, which pads level-restricted pair lists to
+    fixed power-of-two lengths so sub-steps reuse compiled programs.
+    """
     if cfg.use_pallas:
         from ..kernels.sph_pair import ops as pair_ops
-        return pair_ops.density_pairs(cells, pairs, kernel=cfg.kernel)
+        return pair_ops.density_pairs(cells, pairs, kernel=cfg.kernel,
+                                      pair_mask=pair_mask)
 
     pos_i = cells.pos[pairs.ci]                        # (P, C, 3)
     pos_j = cells.pos[pairs.cj] + pairs.shift[:, None, :]
@@ -69,11 +76,12 @@ def _density_pass(cells: ParticleCells, pairs: PairList, cfg: SPHConfig):
 
     ncells, cap = cells.mass.shape
     notself = (pairs.ci != pairs.cj).astype(cells.pos.dtype)[:, None]
+    live = jnp.ones_like(notself) if pair_mask is None else pair_mask[:, None]
 
     def scatter(field_ij, field_ji):
         out = jnp.zeros((ncells, cap), cells.pos.dtype)
-        out = out.at[pairs.ci].add(field_ij)
-        out = out.at[pairs.cj].add(field_ji * notself)
+        out = out.at[pairs.ci].add(field_ij * live)
+        out = out.at[pairs.cj].add(field_ji * notself * live)
         return out
 
     rho = scatter(dij.rho, dji.rho)
@@ -83,13 +91,14 @@ def _density_pass(cells: ParticleCells, pairs: PairList, cfg: SPHConfig):
 
 
 def _force_pass(cells: ParticleCells, pairs: PairList, rho, press, omega, cs,
-                cfg: SPHConfig):
+                cfg: SPHConfig, pair_mask: Optional[jax.Array] = None):
     """All force_self/force_pair tasks as two batched ops."""
     if cfg.use_pallas:
         from ..kernels.sph_pair import ops as pair_ops
         return pair_ops.force_pairs(cells, pairs, rho, press, omega, cs,
                                     kernel=cfg.kernel,
-                                    alpha_visc=cfg.alpha_visc)
+                                    alpha_visc=cfg.alpha_visc,
+                                    pair_mask=pair_mask)
 
     gi = lambda a: a[pairs.ci]
     gj = lambda a: a[pairs.cj]
@@ -110,13 +119,14 @@ def _force_pass(cells: ParticleCells, pairs: PairList, rho, press, omega, cs,
 
     ncells, cap = cells.mass.shape
     notself = (pairs.ci != pairs.cj).astype(cells.pos.dtype)
+    live = jnp.ones_like(notself) if pair_mask is None else pair_mask
 
     dv = jnp.zeros((ncells, cap, 3), cells.pos.dtype)
-    dv = dv.at[pairs.ci].add(fij.dv)
-    dv = dv.at[pairs.cj].add(fji.dv * notself[:, None, None])
+    dv = dv.at[pairs.ci].add(fij.dv * live[:, None, None])
+    dv = dv.at[pairs.cj].add(fji.dv * (notself * live)[:, None, None])
     du = jnp.zeros((ncells, cap), cells.pos.dtype)
-    du = du.at[pairs.ci].add(fij.du)
-    du = du.at[pairs.cj].add(fji.du * notself[:, None])
+    du = du.at[pairs.ci].add(fij.du * live[:, None])
+    du = du.at[pairs.cj].add(fji.du * (notself * live)[:, None])
     return dv, du
 
 
@@ -168,58 +178,113 @@ def step(state: SPHState, pairs: PairList, dt, box: float,
                     time=state.time + dt)
 
 
+def cfl_timestep_particles(state: SPHState, cfg: SPHConfig) -> jax.Array:
+    """Per-particle CFL dt (ncells, C); +inf on padded slots.
+
+    The time-bin hierarchy quantises this field into power-of-two bins;
+    the global-dt engine takes its minimum.
+    """
+    cells = state.cells
+    return cfl_timestep_block(cells.h, cells.u, cells.vel, cells.mask,
+                              gamma=cfg.gamma, cfl=cfg.cfl)
+
+
 def cfl_timestep(state: SPHState, cfg: SPHConfig) -> jax.Array:
     """dt = C_CFL · min_i h_i / (c_i + |v_i|)."""
-    from .physics import sound_speed
-    cells = state.cells
-    cs = sound_speed(state.rho, cells.u, cfg.gamma)
-    speed = jnp.linalg.norm(cells.vel, axis=-1) + cs
-    ok = cells.mask > 0
-    dt = jnp.where(ok, cells.h / jnp.maximum(speed, 1e-12), jnp.inf)
-    return cfg.cfl * jnp.min(dt)
+    return jnp.min(cfl_timestep_particles(state, cfg))
 
 
 # -------------------------------------------------------------- task graph
 def build_taskgraph(spec: GridSpec, pairs: PairList,
                     occupancy: np.ndarray,
-                    cost_model: Optional[CostModel] = None) -> TaskGraph:
+                    cost_model: Optional[CostModel] = None, *,
+                    cell_bins: Optional[np.ndarray] = None,
+                    level: Optional[int] = None,
+                    occupancy_by_bin: Optional[np.ndarray] = None,
+                    time_average: bool = False) -> TaskGraph:
     """SWIFT's Fig. 1 task hierarchy for the current grid.
 
     Per cell: sort → … → ghost → … → kick; per pair (and per self-cell):
     density and force tasks with the dependencies of eqs. (2)–(4). Costs are
     the cost model's asymptotic estimates over the *actual* occupancies —
     the graph the domain decomposition partitions.
+
+    Time-bin extensions (see ``timebins.py``):
+
+    * ``cell_bins`` (ncells,) — each cell's deepest occupied time bin
+      (−1 for empty cells). With ``level`` set, every task gets an
+      *activation mask*: a per-cell task is active iff its cell holds a
+      particle in a bin ≥ level; a pair task is active iff either cell
+      does (an inactive neighbour still contributes to an active cell's
+      sums, so the pair must run). ``wave_schedule(..., active_only=True)``
+      then compiles a program over only the due work.
+    * ``time_average`` with ``occupancy_by_bin`` (ncells, nbins) — task
+      costs become cycle-averaged active work (bin b pays on a fraction
+      2**(b−d) of sub-steps), so ``decompose_cells`` balances what
+      actually runs rather than where particles merely sit.
     """
     cm = cost_model or CostModel(rates={})
     g = TaskGraph()
     nc = spec.ncells
     occ = np.asarray(occupancy, dtype=np.int64)
+    if time_average and occupancy_by_bin is None:
+        raise ValueError("time_average=True requires occupancy_by_bin")
+    bins_arr = None
+    if cell_bins is not None:
+        bins_arr = np.asarray(cell_bins, dtype=np.int64)
+    obb = None
+    max_bin = 0
+    if occupancy_by_bin is not None:
+        obb = np.asarray(occupancy_by_bin, dtype=np.int64)
+        max_bin = obb.shape[1] - 1
+    elif bins_arr is not None:
+        max_bin = int(bins_arr.max()) if bins_arr.size else 0
+
+    def cell_active(c: int) -> bool:
+        if bins_arr is None or level is None:
+            return True
+        return bool(bins_arr[c] >= level)
+
+    def cell_cost(kind: str, c: int) -> float:
+        if time_average:
+            return cm.timebin_units(kind, obb[c], max_bin=max_bin)
+        return cm.units(kind, max(int(occ[c]), 1))
+
+    def inter_cost(kind: str, a: int, b: Optional[int] = None) -> float:
+        if time_average:
+            return cm.timebin_units(kind, obb[a],
+                                    obb[b] if b is not None else None,
+                                    max_bin=max_bin)
+        if b is None:
+            return cm.units(kind, int(occ[a]))
+        return cm.units(kind, int(occ[a]), int(occ[b]))
+
     sort = [g.add_task("sort", resources=(c,), writes=(c,),
-                       cost=cm.units("sort", max(int(occ[c]), 1)))
+                       cost=cell_cost("sort", c), active=cell_active(c))
             for c in range(nc)]
     ghost = [g.add_task("ghost", resources=(c,), writes=(c,),
-                        cost=cm.units("ghost", max(int(occ[c]), 1)))
+                        cost=cell_cost("ghost", c), active=cell_active(c))
              for c in range(nc)]
     kick = [g.add_task("kick", resources=(c,), writes=(c,),
-                       cost=cm.units("kick", max(int(occ[c]), 1)))
+                       cost=cell_cost("kick", c), active=cell_active(c))
             for c in range(nc)]
     ci = np.asarray(pairs.ci)
     cj = np.asarray(pairs.cj)
     for a, b in zip(ci, cj):
         a, b = int(a), int(b)
         if a == b:
+            act = cell_active(a)
             d = g.add_task("density_self", resources=(a,), writes=(a,),
-                           cost=cm.units("density_self", int(occ[a])))
+                           cost=inter_cost("density_self", a), active=act)
             f = g.add_task("force_self", resources=(a,), writes=(a,),
-                           cost=cm.units("force_self", int(occ[a])))
+                           cost=inter_cost("force_self", a), active=act)
             res = (a,)
         else:
+            act = cell_active(a) or cell_active(b)
             d = g.add_task("density_pair", resources=(a, b), writes=(a, b),
-                           cost=cm.units("density_pair", int(occ[a]),
-                                         int(occ[b])))
+                           cost=inter_cost("density_pair", a, b), active=act)
             f = g.add_task("force_pair", resources=(a, b), writes=(a, b),
-                           cost=cm.units("force_pair", int(occ[a]),
-                                         int(occ[b])))
+                           cost=inter_cost("force_pair", a, b), active=act)
             res = (a, b)
         for c in res:
             g.add_dependency(d, sort[c])     # density after sort

@@ -38,6 +38,43 @@ def uniform_ic(n_side: int, *, box: float = 1.0, temperature: float = 1.0,
     }
 
 
+def sedov_ic(n_side: int, *, box: float = 1.0, e0: float = 1.0,
+             u_background: float = 1e-6, r_inject: float | None = None,
+             jitter: float = 0.02, seed: int = 0,
+             n_target: float = 48.0) -> Dict[str, np.ndarray]:
+    """Sedov–Taylor point explosion: cold uniform gas + central energy spike.
+
+    The blast energy ``e0`` is deposited, kernel-weighted, into the
+    particles within ``r_inject`` of the box centre. The resulting internal
+    energy contrast (~``e0 / u_background`` per unit mass) drives a sound
+    speed — and hence CFL time-step — contrast of order sqrt(contrast):
+    with the defaults the central particles demand steps >3 decades shorter
+    than the quiescent background, the scenario hierarchical time bins
+    exist for. Energy conservation against the analytic Sedov solution is
+    the standard accuracy check.
+    """
+    ic = uniform_ic(n_side, box=box, temperature=u_background,
+                    jitter=jitter, seed=seed, n_target=n_target)
+    pos = ic["pos"]
+    centre = np.full(3, box / 2.0, np.float32)
+    if r_inject is None:
+        r_inject = 2.0 * box / n_side        # a couple of lattice spacings
+    d = pos - centre
+    d -= box * np.round(d / box)             # min-image
+    r = np.linalg.norm(d, axis=1)
+    sel = r < r_inject
+    if not sel.any():
+        sel = np.argsort(r)[:1]              # degenerate: nearest particle
+        w = np.ones(1)
+    else:
+        w = 1.0 - (r[sel] / r_inject) ** 2   # smooth central weighting
+    w = w / w.sum()
+    u = ic["u"].astype(np.float64)
+    u[sel] += e0 * w / ic["mass"][sel]
+    ic["u"] = u.astype(np.float32)
+    return ic
+
+
 def clustered_ic(n: int, *, box: float = 1.0, n_halos: int = 32,
                  clustered_fraction: float = 0.8, seed: int = 0,
                  temperature: float = 1.0,

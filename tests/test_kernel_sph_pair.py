@@ -79,13 +79,20 @@ def test_force_kernel_matches_ref(P, C, alpha):
 
 def test_kernel_symmetric_pair_momentum():
     """Σ m_i dv_i + Σ m_j dv_j = 0 for a symmetric pair (paper: exploiting
-    the pairwise symmetry keeps Newton's third law exact)."""
+    the pairwise symmetry keeps Newton's third law exact).
+
+    The sums are accumulated in float64 so the assertion measures the
+    *kernel outputs'* antisymmetry (whose floor is the f32 rounding of each
+    dv entry), not the test reduction's own f32 summation noise.
+    """
     args = _force_inputs(2, 16, seed=9)
     dv_i, du_i, dv_j, du_j = force_pair_pallas(*args, kernel="cubic",
                                                alpha_visc=0.8,
                                                interpret=True)
     m_i, mask_i = args[7], args[8]
     m_j, mask_j = args[16], args[17]
-    p_i = np.asarray((m_i * mask_i)[..., None] * dv_i).sum((0, 1))
-    p_j = np.asarray((m_j * mask_j)[..., None] * dv_j).sum((0, 1))
+    w_i = np.asarray(m_i * mask_i, dtype=np.float64)
+    w_j = np.asarray(m_j * mask_j, dtype=np.float64)
+    p_i = (w_i[..., None] * np.asarray(dv_i, dtype=np.float64)).sum((0, 1))
+    p_j = (w_j[..., None] * np.asarray(dv_j, dtype=np.float64)).sum((0, 1))
     np.testing.assert_allclose(p_i + p_j, 0.0, atol=1e-4)

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Graph, evaluate, partition_geometric, partition_graph)

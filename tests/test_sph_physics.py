@@ -136,3 +136,37 @@ def test_clustered_ic_has_dynamic_range():
     ic = clustered_ic(3000, seed=1)
     ratio = ic["h"].max() / ic["h"].min()
     assert ratio > 4.0                  # orders-of-magnitude density contrast
+
+
+def test_sedov_ic_energy_and_dt_spread():
+    """The blast IC injects exactly e0 and opens a ≥3-decade CFL dt spread
+    — the dynamic range the time-bin hierarchy exists for."""
+    from repro.sph import sedov_ic
+    from repro.sph.physics import cfl_timestep_block
+    import jax.numpy as jnp
+
+    e0 = 1.0
+    ic = sedov_ic(8, e0=e0, u_background=1e-6, seed=0)
+    base = uniform_ic(8, temperature=1e-6, jitter=0.02, seed=0)
+    injected = float(np.sum(ic["mass"] * (ic["u"] - base["u"])))
+    assert injected == pytest.approx(e0, rel=1e-4)
+    # per-particle CFL spread ≥ 3 decades (hot centre vs cold background)
+    dt = np.asarray(cfl_timestep_block(
+        jnp.asarray(ic["h"]), jnp.asarray(ic["u"]),
+        jnp.asarray(ic["vel"]), jnp.ones(len(ic["u"]))))
+    assert dt.max() / dt.min() > 1e3
+
+
+def test_cfl_timestep_block_masks_and_scales():
+    from repro.sph.physics import cfl_timestep_block, sound_speed
+    import jax.numpy as jnp
+
+    h = jnp.asarray([0.1, 0.2, 0.1])
+    u = jnp.asarray([1.0, 1.0, 4.0])
+    vel = jnp.zeros((3, 3))
+    mask = jnp.asarray([1.0, 1.0, 0.0])
+    dt = np.asarray(cfl_timestep_block(h, u, vel, mask, cfl=0.25))
+    cs = np.asarray(sound_speed(jnp.ones(3), u))
+    np.testing.assert_allclose(dt[0], 0.25 * 0.1 / cs[0], rtol=1e-6)
+    np.testing.assert_allclose(dt[1], 2 * dt[0], rtol=1e-6)   # ∝ h
+    assert np.isinf(dt[2])                                    # padded slot

@@ -1,0 +1,329 @@
+"""Hierarchical time-bin integration: bin math, KDK ladder, activity-aware
+scheduling, and conservation against the global-dt engine."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (AsyncExecutorSim, CostModel, cell_activation_frequency,
+                        decompose_cells, timebin_frequency,
+                        timebin_node_weights, wave_schedule)
+from repro.sph import (SPHConfig, Simulation, TimeBinSimulation, active_level,
+                       assign_bins, bin_timestep, sedov_ic, uniform_ic)
+from repro.sph.cellgrid import bin_particles, build_pair_list, choose_grid
+from repro.sph.engine import build_taskgraph, cfl_timestep_particles, \
+    init_state, step
+from repro.sph.timebins import cell_bin_histogram, cell_max_bins, \
+    limit_neighbour_bins
+
+
+# ----------------------------------------------------------------- bin math
+def test_bin_assignment_roundtrips_cfl_dt():
+    """dt_bin = dt_max/2**b obeys dt/2 < dt_bin ≤ dt (never overshoots the
+    CFL step, never wastes more than a factor 2)."""
+    rng = np.random.default_rng(0)
+    dt_max = 0.8
+    dt = dt_max * 10 ** (-3 * rng.random(512))       # 3 decades
+    b = assign_bins(dt, dt_max, max_bin=32)
+    dt_b = bin_timestep(dt_max, b)
+    assert (dt_b <= dt * (1 + 1e-5)).all()
+    assert (dt_b > dt / 2 * (1 - 1e-5)).all()
+
+
+def test_bin_assignment_exact_powers():
+    dt_max = 1.0
+    dts = np.array([1.0, 0.5, 0.25, 0.125, 2.0], np.float32)
+    b = assign_bins(dts, dt_max, max_bin=10)
+    assert list(b) == [0, 1, 2, 3, 0]
+
+
+def test_bin_assignment_clips_and_handles_inf():
+    b = assign_bins(np.array([np.inf, 1e-12, 0.3]), 1.0, max_bin=4)
+    assert list(b) == [0, 4, 2]
+
+
+def test_active_level_ladder():
+    depth = 3
+    levels = [active_level(n, depth) for n in range(8)]
+    # n=0 starts everything; odd sub-steps only the deepest bin
+    assert levels == [0, 3, 2, 3, 1, 3, 2, 3]
+    # bin b fires at multiples of 2**(depth-b): count activations per cycle
+    for b in range(depth + 1):
+        fires = sum(1 for n in range(1, 2 ** depth + 1)
+                    if b >= active_level(n, depth))
+        assert fires == 2 ** b
+
+
+def test_neighbour_limiter_propagates():
+    # 4 cells in a row (pairs chain), one deep cell: floor decays by delta
+    # per hop
+    bins = np.array([[6], [0], [0], [0]], np.int32)
+    mask = np.ones((4, 1), np.float32)
+    ci = np.array([0, 1, 2])
+    cj = np.array([1, 2, 3])
+    out = limit_neighbour_bins(bins, mask, ci, cj, delta=2, max_bin=6)
+    assert list(out[:, 0]) == [6, 4, 2, 0]
+
+
+# ---------------------------------------------------- cost model / partition
+def test_timebin_frequency_and_node_weights():
+    assert timebin_frequency(3, 3) == 1.0
+    assert timebin_frequency(0, 3) == 0.125
+    assert cell_activation_frequency([0, 0], 3) == 0.0
+    assert cell_activation_frequency([5, 1], 3) == 0.25
+    occ = np.array([[4, 0, 0, 4],      # 4 slow + 4 fastest
+                    [8, 0, 0, 0]])     # all slow
+    w = timebin_node_weights(occ)
+    assert w[0] == pytest.approx(4 * 0.125 + 4 * 1.0)
+    assert w[1] == pytest.approx(8 * 0.125)
+
+
+def test_timebin_units_scale_with_activity():
+    cm = CostModel(rates={})
+    # all particles in the deepest bin: same as plain units
+    full = cm.timebin_units("force_self", [0, 0, 8], max_bin=2)
+    assert full == pytest.approx(cm.units("force_self", 8))
+    # all particles in bin 0 of a depth-2 hierarchy: 4× cheaper
+    idle = cm.timebin_units("force_self", [8, 0, 0], max_bin=2)
+    assert idle == pytest.approx(full / 4)
+    # pair tasks fire at the max of the two cells' frequencies
+    pair_fast = cm.timebin_units("force_pair", [8, 0, 0], [0, 0, 8],
+                                 max_bin=2)
+    assert pair_fast == pytest.approx(cm.units("force_pair", 8, 8))
+    # per-particle tasks: each bin pays at its own cadence
+    kick = cm.timebin_units("kick", [4, 0, 4], max_bin=2)
+    assert kick == pytest.approx(4 * 0.25 + 4 * 1.0)
+
+
+def test_decompose_balances_time_averaged_work():
+    ic = sedov_ic(8, e0=1.0, seed=0)
+    spec = choose_grid(ic["box"], float(ic["h"].max()), len(ic["pos"]))
+    cells, _ = bin_particles(spec, ic["pos"], ic["vel"], ic["mass"],
+                             ic["u"], ic["h"])
+    pairs = build_pair_list(spec)
+    occ = (np.asarray(cells.mask) > 0).sum(axis=1)
+    # synthetic bins: one hot cell (deepest), mild 2**2 contrast so the
+    # partitioner can still balance 27 cells over 4 ranks
+    bins = np.zeros(cells.mass.shape, np.int32)
+    bins[0] = 2
+    cb = cell_max_bins(bins, np.asarray(cells.mask))
+    obb = cell_bin_histogram(bins, np.asarray(cells.mask), 3)
+    g = build_taskgraph(spec, pairs, occ, CostModel(rates={}),
+                        cell_bins=cb, occupancy_by_bin=obb,
+                        time_average=True)
+    dec = decompose_cells(g, spec.ncells, 4,
+                          node_weights=timebin_node_weights(obb))
+    assert dec.assignment.shape == (spec.ncells,)
+    assert len(np.unique(dec.assignment)) > 1
+    # the graph's time-averaged costs must weight the hot cell far above a
+    # cold one with the same occupancy
+    node_w, _ = g.cell_graph()
+    cold = [c for c in range(1, spec.ncells) if occ[c] == occ[0]]
+    if cold:
+        assert node_w[0] > 2 * node_w[cold[0]]
+
+
+# ------------------------------------------------- activity-aware scheduling
+def _bins_graph(level):
+    ic = uniform_ic(6, seed=0)
+    spec = choose_grid(ic["box"], float(ic["h"].max()), len(ic["pos"]))
+    cells, _ = bin_particles(spec, ic["pos"], ic["vel"], ic["mass"],
+                             ic["u"], ic["h"])
+    pairs = build_pair_list(spec)
+    occ = (np.asarray(cells.mask) > 0).sum(axis=1)
+    bins = np.zeros(cells.mass.shape, np.int32)
+    bins[:2] = 4                      # two deep cells, rest at bin 0
+    cb = cell_max_bins(bins, np.asarray(cells.mask))
+    g = build_taskgraph(spec, pairs, occ, CostModel(rates={}),
+                        cell_bins=cb, level=level)
+    return g, spec
+
+
+def test_wave_schedule_skips_inactive_tasks():
+    g, spec = _bins_graph(level=2)
+    active = g.active_tasks()
+    assert 0 < len(active) < len(g.tasks)       # genuinely partial
+    waves = wave_schedule(g, active_only=True)
+    scheduled = {tid for w in waves for tid in w}
+    assert scheduled == set(active)             # every active task, nothing else
+    full = {tid for w in wave_schedule(g) for tid in w}
+    assert scheduled < full
+    # pair tasks touching an active cell are active even if the partner
+    # cell is idle (the idle neighbour feeds the active cell's sums)
+    for t in g.tasks.values():
+        if t.kind == "density_pair":
+            cells_active = [bool(c < 2) for c in t.resources]
+            assert t.active == any(cells_active)
+
+
+def test_wave_schedule_level0_activates_everything():
+    g, _ = _bins_graph(level=0)
+    waves = wave_schedule(g, active_only=True)
+    assert {tid for w in waves for tid in w} == set(g.tasks)
+
+
+def test_async_sim_skips_inactive_tasks():
+    g, _ = _bins_graph(level=2)
+    for t in g.tasks.values():
+        object.__setattr__(t, "rank", 0)
+    r_active = AsyncExecutorSim(g, ranks=1, threads=2,
+                                active_only=True).run()
+    r_full = AsyncExecutorSim(g, ranks=1, threads=2).run()
+    assert r_active.makespan < r_full.makespan
+
+
+# ------------------------------------------------------------ KDK ladder
+def _ic_two_temperature(n_side=6, ratio=16.0, seed=0, hot_ball=False):
+    """Hot region (u × ratio) → two CFL bins, cs ratio = sqrt(ratio).
+
+    ``hot_ball`` localises the hot gas so that (on a fine enough cell
+    grid) distant cold cells sit outside the hot region's signal-velocity
+    stencil and genuinely keep long steps.
+    """
+    ic = uniform_ic(n_side, seed=seed, temperature=0.5)
+    if hot_ball:
+        d = ic["pos"] - 0.75 * ic["box"]
+        d -= ic["box"] * np.round(d / ic["box"])
+        hot = np.linalg.norm(d, axis=1) < 0.15 * ic["box"]
+    else:
+        hot = ic["pos"][:, 0] > ic["box"] / 2
+    u = ic["u"].copy()
+    u[hot] *= ratio
+    ic["u"] = u
+    rng = np.random.default_rng(seed + 1)
+    ic["vel"] = (0.02 * rng.standard_normal(ic["vel"].shape)
+                 ).astype(np.float32)
+    return ic
+
+
+def test_depth_zero_cycle_matches_global_engine():
+    """With every particle in bin 0 the ladder is exactly one KDK step."""
+    ic = _ic_two_temperature()
+    cfg = SPHConfig(alpha_visc=0.8)
+    dt = 1e-3
+    tb = TimeBinSimulation(ic["pos"], ic["vel"], ic["mass"], ic["u"],
+                           ic["h"], box=ic["box"], cfg=cfg, dt_max=dt,
+                           depth_headroom=0, rebin_each_cycle=False)
+    gl = Simulation(ic["pos"], ic["vel"], ic["mass"], ic["u"], ic["h"],
+                    box=ic["box"], cfg=cfg, rebin_every=10 ** 9)
+    stats = tb.run_cycle()
+    assert stats["depth"] == 0 and stats["substeps"] == 1
+    gl.run(1, dt=dt)
+    m = np.asarray(tb.state.cells.mask) > 0
+    np.testing.assert_allclose(
+        np.asarray(tb.state.cells.pos)[m], np.asarray(gl.state.cells.pos)[m],
+        atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(tb.state.cells.vel)[m], np.asarray(gl.state.cells.vel)[m],
+        atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(tb.state.cells.u)[m], np.asarray(gl.state.cells.u)[m],
+        rtol=1e-5)
+
+
+def test_drift_only_prediction_is_second_order():
+    """An inactive particle's drifted position differs from full KDK
+    integration by the O(dt²) acceleration term only."""
+    ic = _ic_two_temperature()
+    cfg = SPHConfig(alpha_visc=0.0)
+    spec = choose_grid(ic["box"], float(ic["h"].max()), len(ic["pos"]))
+    cells, _ = bin_particles(spec, ic["pos"], ic["vel"], ic["mass"],
+                             ic["u"], ic["h"])
+    pairs = build_pair_list(spec)
+    state = init_state(cells, pairs, cfg)
+    for dt in (2e-3, 1e-3):
+        full = step(state, pairs, jnp.float32(dt), ic["box"], cfg)
+        drifted = np.mod(np.asarray(cells.pos)
+                         + dt * np.asarray(cells.vel)
+                         * np.asarray(cells.mask)[..., None], ic["box"])
+        m = np.asarray(cells.mask) > 0
+        err = np.abs(np.asarray(full.cells.pos)[m] - drifted[m])
+        err = np.minimum(err, ic["box"] - err)       # periodic
+        bound = 0.5 * dt * dt * np.abs(np.asarray(state.accel)[m])
+        # 0.5·a·dt² is the *exact* gap for one KDK step (x gains ½ a dt²
+        # through the half-kicked velocity); allow rounding slack
+        assert err.max() <= bound.max() * 1.5 + 1e-7
+        assert err.max() <= 10.0 * dt * dt           # O(dt²) scaling
+
+
+@pytest.mark.slow
+def test_two_bin_system_conserves_like_global():
+    """A two-temperature gas lands in ≥2 occupied bins; energy drift must
+    stay within 2× of the global-dt engine over the same span, and the
+    momentum drift (multi-dt breaks exact pair symmetry — the global
+    engine conserves to machine precision by construction) must be
+    negligible against the system's momentum scale."""
+    ic = _ic_two_temperature(n_side=10, ratio=16.0, hot_ball=True)
+    cfg = SPHConfig(alpha_visc=0.8)
+    tb = TimeBinSimulation(ic["pos"], ic["vel"], ic["mass"], ic["u"],
+                           ic["h"], box=ic["box"], cfg=cfg, max_depth=4)
+    e0t, p0t = tb.diagnostics()
+    stats = [tb.run_cycle() for _ in range(2)]
+    e1t, p1t = tb.diagnostics()
+    assert all(np.count_nonzero(s["bin_hist"]) >= 2 for s in stats)
+    span = float(tb.state.time)
+    # fewer updates than the dt_min-equivalent lock-step ladder
+    assert tb.particle_updates < 0.5 * tb.global_equiv_updates
+
+    gl = Simulation(ic["pos"], ic["vel"], ic["mass"], ic["u"], ic["h"],
+                    box=ic["box"], cfg=cfg, rebin_every=4)
+    e0g, p0g = gl.diagnostics()
+    while float(gl.state.time) < span:
+        gl.run(1)
+    e1g, p1g = gl.diagnostics()
+
+    drift_t = abs(e1t - e0t) / abs(e0t)
+    drift_g = abs(e1g - e0g) / abs(e0g)
+    assert drift_t <= 2.0 * drift_g + 1e-4
+    c = tb.state.cells
+    p_scale = float(np.abs(np.asarray(c.mass * c.mask)[..., None]
+                           * np.asarray(c.vel)).sum())
+    assert np.abs(p1t - p0t).max() <= 1e-4 * max(p_scale, 1e-3)
+
+
+@pytest.mark.slow
+def test_multi_dt_does_less_work_on_sedov():
+    """Acceptance: measurably fewer particle updates on the blast, with
+    energy drift within 2× of global-dt for the same simulated span."""
+    ic = sedov_ic(12, e0=1.0, seed=0)
+    cfg = SPHConfig(alpha_visc=1.0, cfl=0.15)
+    tb = TimeBinSimulation(ic["pos"], ic["vel"], ic["mass"], ic["u"],
+                           ic["h"], box=ic["box"], cfg=cfg, dt_max=0.02,
+                           max_depth=8)
+    e0t, _ = tb.diagnostics()
+    for _ in range(2):
+        tb.run_cycle()
+    e1t, _ = tb.diagnostics()
+    span = float(tb.state.time)
+    assert np.isfinite(e1t)
+    assert tb.particle_updates < 0.5 * tb.global_equiv_updates
+
+    gl = Simulation(ic["pos"], ic["vel"], ic["mass"], ic["u"], ic["h"],
+                    box=ic["box"], cfg=cfg, rebin_every=4)
+    e0g, _ = gl.diagnostics()
+    steps = 0
+    while float(gl.state.time) < span:
+        gl.run(1)
+        steps += 1
+    e1g, _ = gl.diagnostics()
+    # fewer updates than the global engine actually performed
+    assert tb.particle_updates < steps * len(ic["pos"])
+    drift_t = abs(e1t - e0t) / abs(e0t)
+    drift_g = abs(e1g - e0g) / abs(e0g)
+    assert drift_t <= 2.0 * drift_g + 1e-3
+
+
+def test_per_particle_cfl_min_matches_global():
+    ic = _ic_two_temperature()
+    cfg = SPHConfig()
+    spec = choose_grid(ic["box"], float(ic["h"].max()), len(ic["pos"]))
+    cells, _ = bin_particles(spec, ic["pos"], ic["vel"], ic["mass"],
+                             ic["u"], ic["h"])
+    pairs = build_pair_list(spec)
+    state = init_state(cells, pairs, cfg)
+    from repro.sph.engine import cfl_timestep
+    dts = np.asarray(cfl_timestep_particles(state, cfg))
+    m = np.asarray(cells.mask) > 0
+    assert float(dts[m].min()) == pytest.approx(
+        float(cfl_timestep(state, cfg)), rel=1e-6)
+    assert np.isinf(dts[~m]).all()
