@@ -1,0 +1,97 @@
+"""Per-sub-step halo export volume: activity-aware vs full boundary.
+
+Runs the distributed time-bin engine on the Sedov blast (the scenario with
+the strongest bin contrast) twice — with activity-aware halo exchanges
+(only cut cells whose bins are active at a sub-step ship data) and with
+the full-boundary baseline (every cut cell ships at every force sub-step)
+— and reports exported (cell, importer) slots per sub-step plus the
+estimated byte volume. Both runs produce identical physics: the baseline
+only re-ships data the replicas already hold.
+
+Also replays the final bin assignment through the *static* schedule
+(``halo_export_schedule``) — the planning-side accounting that the comm
+planner's activation-frequency weights (``CostModel.timebin_units``)
+approximate.
+
+Run:  PYTHONPATH=src python benchmarks/halo_volume.py [n_side] [ncycles]
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sph import SimulationSpec, SPHConfig, build_simulation
+from repro.sph.dist_timebins import (_EX1_FIELDS, _EX2_FIELDS,
+                                     build_rank_plan, halo_export_schedule)
+from repro.sph.timebins import cell_max_bins
+
+try:                                    # runnable as module or script
+    from .common import emit
+except ImportError:                     # pragma: no cover
+    from common import emit
+
+
+def _spec(n_side, nranks, activity_aware):
+    return SimulationSpec(
+        scenario="sedov",
+        scenario_params={"n_side": n_side, "e0": 1.0, "seed": 0,
+                         "n_target": 16.0, "r_inject": 0.5 / n_side},
+        physics=SPHConfig(alpha_visc=1.0, cfl=0.15, n_target=16.0),
+        integrator="timebin", backend="distributed", ranks=nranks,
+        max_depth=8, activity_aware_halos=activity_aware)
+
+
+def run(n_side=10, ncycles=2, nranks=4) -> list:
+    rows = []
+    results = {}
+    for aware in (True, False):
+        sim = build_simulation(_spec(n_side, nranks, aware))
+        for _ in range(ncycles):
+            sim.step()
+        eng = sim.engine
+        results[aware] = eng
+        substeps = max(eng.substeps, 1)
+        bytes_per_slot = (np.asarray(eng.state.cells.mass).shape[1]
+                          * (_EX1_FIELDS + _EX2_FIELDS) * 4)
+        name = "halo/activity_aware" if aware else "halo/full_boundary"
+        rows.append({
+            "name": f"{name}/slots_per_substep",
+            "us_per_call": round(eng.halo_exported_slots / substeps, 3),
+            "derived": f"total_slots={eng.halo_exported_slots};"
+                       f"bytes_per_substep="
+                       f"{eng.halo_exported_slots * bytes_per_slot / substeps:.0f};"
+                       f"substeps={eng.substeps};"
+                       f"updates={eng.particle_updates}"})
+    aware, full = results[True], results[False]
+    e_aware, _ = aware.diagnostics()
+    e_full, _ = full.diagnostics()
+    rows.append({
+        "name": "halo/volume_saving",
+        "us_per_call": round(1.0 - aware.halo_exported_slots
+                             / max(full.halo_exported_slots, 1), 3),
+        "derived": f"aware={aware.halo_exported_slots};"
+                   f"full={full.halo_exported_slots};"
+                   f"identical_physics={abs(e_aware - e_full) < 1e-12}"})
+
+    # static schedule replay of the final bin assignment
+    eng = results[True]
+    cb = cell_max_bins(np.asarray(eng.state.bins),
+                       np.asarray(eng.state.cells.mask))
+    plan = build_rank_plan(eng._assignment, eng._ci, eng._cj,
+                           nranks=eng.nranks)
+    depth = max(int(cb.max()), 1)
+    sched = halo_export_schedule(cb, plan, depth)
+    rows.append({
+        "name": "halo/static_schedule_saving",
+        "us_per_call": round(1.0 - sched["active"].sum()
+                             / max(sched["full"].sum(), 1), 3),
+        "derived": f"active={int(sched['active'].sum())};"
+                   f"full={int(sched['full'].sum())};depth={depth}"})
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    n_side = int(sys.argv[1]) if len(sys.argv) > 1 else 10
+    ncycles = int(sys.argv[2]) if len(sys.argv) > 2 else 2
+    emit(run(n_side=n_side, ncycles=ncycles), "halo_volume")

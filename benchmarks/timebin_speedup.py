@@ -24,7 +24,8 @@ import time
 import numpy as np
 
 from repro.core import AsyncExecutorSim, CostModel, wave_schedule
-from repro.sph import SPHConfig, Simulation, TimeBinSimulation, sedov_ic
+from repro.sph import (SPHConfig, SimulationSpec, build_simulation,
+                       sedov_ic)
 from repro.sph.engine import build_taskgraph
 from repro.sph.timebins import cell_max_bins
 
@@ -39,11 +40,13 @@ def run(n_side=16, ncycles=3, dt_max=0.02, e0=1.0, seed=0,
     ic = sedov_ic(n_side, e0=e0, seed=seed)
     n = len(ic["pos"])
     cfg = SPHConfig(alpha_visc=1.0, cfl=0.15)
-    args = (ic["pos"], ic["vel"], ic["mass"], ic["u"], ic["h"])
+    spec = SimulationSpec(
+        scenario="sedov",
+        scenario_params={"n_side": n_side, "e0": e0, "seed": seed},
+        physics=cfg, dt_max=dt_max, max_depth=max_depth)
 
     # ---------------------------------------------------------- multi-dt
-    tb = TimeBinSimulation(*args, box=ic["box"], cfg=cfg, dt_max=dt_max,
-                           max_depth=max_depth)
+    tb = build_simulation(spec.with_(integrator="timebin"), ic=ic).engine
     e0_m, _ = tb.diagnostics()
     t0 = time.perf_counter()
     hist_tot = None
@@ -60,7 +63,8 @@ def run(n_side=16, ncycles=3, dt_max=0.02, e0=1.0, seed=0,
     drift_multi = abs(e1_m - e0_m) / abs(e0_m)
 
     # --------------------------------------------------------- global-dt
-    gl = Simulation(*args, box=ic["box"], cfg=cfg, rebin_every=4)
+    gl = build_simulation(spec.with_(integrator="global", rebin_every=4),
+                          ic=ic).engine
     e0_g, _ = gl.diagnostics()
     t0 = time.perf_counter()
     steps = 0

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import (AsyncExecutorSim, decompose_with_comm,
                         wave_schedule)
-from repro.sph import SPHConfig, Simulation, clustered_ic
+from repro.sph import SPHConfig, clustered_ic
 from repro.sph.cellgrid import bin_particles, build_pair_list, choose_grid
 from repro.sph.engine import build_taskgraph
 
@@ -71,17 +71,19 @@ def main():
           f"(eff {s.efficiency:.2f})  → {s.makespan/a.makespan:.2f}× faster")
 
     print("=== 4. real SPH integration (conservation check)")
-    from repro.sph import uniform_ic
+    from repro.sph import SimulationSpec, build_simulation, uniform_ic
     rng = np.random.default_rng(1)
     ic2 = uniform_ic(8, seed=2)                  # 512 particles: fast on CPU
     ic2["vel"] = (ic2["vel"]
                   + 0.2 * rng.standard_normal(ic2["vel"].shape)
                   ).astype(np.float32)
-    sim = Simulation(ic2["pos"], ic2["vel"], ic2["mass"], ic2["u"],
-                     ic2["h"], box=ic2["box"],
-                     cfg=SPHConfig(alpha_visc=0.8), rebin_every=5)
+    spec = SimulationSpec(scenario="uniform",
+                          physics=SPHConfig(alpha_visc=0.8),
+                          integrator="global", backend="local",
+                          dt=0.004, rebin_every=5)
+    sim = build_simulation(spec, ic=ic2)
     e0, p0 = sim.diagnostics()
-    sim.run(10, dt=0.004)
+    sim.run(10 * 0.004)
     e1, p1 = sim.diagnostics()
     print(f"    10 steps: |ΔE|/E = {abs(e1-e0)/abs(e0):.2e}, "
           f"|Δp| = {np.abs(p1-p0).max():.2e}")

@@ -27,16 +27,19 @@ def main():
     n_side = int(sys.argv[1]) if len(sys.argv) > 1 else 12
     ncycles = int(sys.argv[2]) if len(sys.argv) > 2 else 4
 
-    from repro.sph import (SPHConfig, TimeBinSimulation, assign_bins,
-                           sedov_ic)
+    from repro.sph import (SPHConfig, SimulationSpec, assign_bins,
+                           build_simulation, sedov_ic)
     from repro.sph.physics import cfl_timestep_block
 
     ic = sedov_ic(n_side, e0=1.0, seed=0)
     n = len(ic["pos"])
     cfg = SPHConfig(alpha_visc=1.0, cfl=0.15)
-    sim = TimeBinSimulation(ic["pos"], ic["vel"], ic["mass"], ic["u"],
-                            ic["h"], box=ic["box"], cfg=cfg,
-                            dt_max=0.02, max_depth=10)
+    spec = SimulationSpec(
+        scenario="sedov", scenario_params={"n_side": n_side, "e0": 1.0,
+                                           "seed": 0},
+        physics=cfg, integrator="timebin", backend="local",
+        dt_max=0.02, max_depth=10)
+    sim = build_simulation(spec, ic=ic).engine
 
     # raw CFL spread of the IC — the dynamic range the bins quantise
     cells = sim.state.cells

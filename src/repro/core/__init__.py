@@ -16,8 +16,9 @@ from .cost_model import (CostModel, LayerCost, attention_cost,
                          timebin_frequency)
 from .comm_planner import (CommStats, HaloPlan, insert_comm_tasks,
                            pairwise_stats_from_partition, plan_halo_1d)
-from .decompose import (Decomposition, assign_tasks, decompose_cells,
-                        decompose_layers, decompose_with_comm,
+from .decompose import (Decomposition, assign_tasks, bin_occupancy_imbalance,
+                        decompose_cells, decompose_layers,
+                        decompose_with_comm, rank_bin_occupancy,
                         timebin_node_weights)
 
 __all__ = [
@@ -31,6 +32,7 @@ __all__ = [
     "model_flops_6nd", "timebin_frequency",
     "CommStats", "HaloPlan", "insert_comm_tasks",
     "pairwise_stats_from_partition", "plan_halo_1d",
-    "Decomposition", "assign_tasks", "decompose_cells", "decompose_layers",
-    "decompose_with_comm", "timebin_node_weights",
+    "Decomposition", "assign_tasks", "bin_occupancy_imbalance",
+    "decompose_cells", "decompose_layers", "decompose_with_comm",
+    "rank_bin_occupancy", "timebin_node_weights",
 ]

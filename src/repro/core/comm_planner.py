@@ -38,7 +38,9 @@ class CommStats:
 
 def insert_comm_tasks(graph: TaskGraph, resource_rank: Dict[int, int],
                       resource_bytes: Dict[int, float],
-                      phases: Optional[Dict[int, str]] = None) -> CommStats:
+                      phases: Optional[Dict[int, str]] = None,
+                      resource_freq: Optional[Dict[int, float]] = None
+                      ) -> CommStats:
     """Insert send/recv tasks for every cross-rank (consumer, resource) pair.
 
     Parameters
@@ -49,6 +51,12 @@ def insert_comm_tasks(graph: TaskGraph, resource_rank: Dict[int, int],
     phases: optional task-kind -> phase label; data is re-sent once per
         phase that needs it (the paper sends twice per step: positions for
         the density phase, densities for the force phase).
+    resource_freq: optional activation frequency of each resource under a
+        time-bin hierarchy (``core.cost_model.cell_activation_frequency``).
+        Send/recv task costs and message statistics are scaled by it: a
+        boundary cell that wakes on 1/8 of the sub-steps ships (and costs)
+        1/8 of what an always-active cell does — the activity-aware halo
+        accounting of ``sph/dist_timebins.py`` at the task-graph layer.
 
     The function deduplicates: one send/recv pair per
     (resource, destination rank, phase). Consumers are made dependent on the
@@ -91,11 +99,16 @@ def insert_comm_tasks(graph: TaskGraph, resource_rank: Dict[int, int],
                 continue
             key = (r, t.rank, phase_of(t.kind))
             if key not in pair_tasks:
-                nbytes = resource_bytes.get(r, 0.0)
-                send = graph.add_task("send", resources=(r,), cost=1e-6,
-                                      rank=owner, payload=(t.rank, nbytes))
-                recv = graph.add_task("recv", resources=(r,), cost=1e-6,
-                                      rank=t.rank, payload=(owner, nbytes))
+                freq = 1.0
+                if resource_freq is not None:
+                    freq = float(resource_freq.get(r, 1.0))
+                nbytes = resource_bytes.get(r, 0.0) * freq
+                send = graph.add_task("send", resources=(r,),
+                                      cost=1e-6 * freq, rank=owner,
+                                      payload=(t.rank, nbytes))
+                recv = graph.add_task("recv", resources=(r,),
+                                      cost=1e-6 * freq, rank=t.rank,
+                                      payload=(owner, nbytes))
                 graph.add_dependency(recv, send)
                 # send waits for the freshest producers in strictly earlier
                 # phases (data must be ready before it is shipped)
@@ -152,11 +165,19 @@ def plan_halo_1d(*, axis: str, radius: int = 1) -> HaloPlan:
 def pairwise_stats_from_partition(
         cell_edges: Dict[Tuple[int, int], float],
         assignment: np.ndarray,
-        cell_bytes: Sequence[float]) -> CommStats:
+        cell_bytes: Sequence[float],
+        cell_freq: Optional[Sequence[float]] = None) -> CommStats:
     """Message statistics implied by a cell partition: one message per
     (cut cell, neighbouring rank, phase) with two phases per step (density +
-    force), matching the paper's accounting."""
-    per_pair: Dict[Tuple[int, int], int] = collections.defaultdict(int)
+    force), matching the paper's accounting.
+
+    With ``cell_freq`` (per-cell activation frequency under a time-bin
+    hierarchy) the counts and bytes become *expected values per finest
+    sub-step*: a cut cell ships only on the sub-steps it is active, so its
+    messages and bytes are scaled by its frequency — the planning-side
+    image of the activity-aware halo exchange.
+    """
+    per_pair: Dict[Tuple[int, int], float] = collections.defaultdict(float)
     per_pair_bytes: Dict[Tuple[int, int], float] = collections.defaultdict(float)
     seen: Set[Tuple[int, int]] = set()
     for (u, v), _w in cell_edges.items():
@@ -167,8 +188,9 @@ def pairwise_stats_from_partition(
             if (cell, dst) in seen:
                 continue
             seen.add((cell, dst))
-            per_pair[(src, dst)] += 2                      # density + force
-            per_pair_bytes[(src, dst)] += 2 * float(cell_bytes[cell])
+            f = 1.0 if cell_freq is None else float(cell_freq[cell])
+            per_pair[(src, dst)] += 2 * f                  # density + force
+            per_pair_bytes[(src, dst)] += 2 * f * float(cell_bytes[cell])
     messages = sum(per_pair.values())
     total = sum(per_pair_bytes.values())
     return CommStats(messages, total, dict(per_pair), dict(per_pair_bytes))

@@ -101,7 +101,15 @@ class CostModel:
         occ = [float(x) for x in occ_by_bin]
         d = int(max_bin) if max_bin is not None else max(len(occ) - 1, 0)
         n_tot = int(sum(occ))
-        if kind in ("sort", "ghost", "kick", "send", "recv"):
+        if kind in ("send", "recv"):
+            # activity-aware halos: the whole cell buffer ships whenever the
+            # cell has *anything* due (and only then), so communication
+            # tasks pay the full message cost at the cell's activation
+            # frequency — not per-particle cadence (the buffer is shipped
+            # as one message either way).
+            return (cell_activation_frequency(occ, d)
+                    * self.units(kind, n_tot))
+        if kind in ("sort", "ghost", "kick"):
             # linear-ish per-particle work: each bin pays at its cadence
             n_eff = sum(o * timebin_frequency(b, d) for b, o in enumerate(occ))
             return self.units(kind, n_tot) * n_eff / max(n_tot, 1)

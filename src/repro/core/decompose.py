@@ -55,10 +55,54 @@ def timebin_node_weights(occupancy_by_bin: np.ndarray) -> np.ndarray:
     return occ @ freq
 
 
+def rank_bin_occupancy(assignment: np.ndarray,
+                       occupancy_by_bin: np.ndarray,
+                       nranks: Optional[int] = None) -> np.ndarray:
+    """(nranks, nbins) per-rank time-bin occupancy under a partition.
+
+    Pass ``nranks`` explicitly when ranks may own zero cells — inferring
+    it from ``assignment.max()`` makes empty ranks invisible.
+    """
+    assignment = np.asarray(assignment, dtype=np.int64)
+    occ = np.asarray(occupancy_by_bin, dtype=np.int64)
+    if nranks is None:
+        nranks = int(assignment.max()) + 1 if assignment.size else 1
+    out = np.zeros((nranks, occ.shape[1]), dtype=np.int64)
+    np.add.at(out, assignment, occ)
+    return out
+
+
+def bin_occupancy_imbalance(assignment: np.ndarray,
+                            occupancy_by_bin: np.ndarray,
+                            nranks: Optional[int] = None) -> float:
+    """max/mean ratio of per-rank *time-averaged active work*.
+
+    The repartition trigger for the distributed time-bin engine: a rank's
+    load is Σ over its cells of ``timebin_node_weights`` — updates actually
+    performed per finest sub-step — so a rank that inherited the deep
+    (short-step) bins shows up here long before raw particle counts drift.
+    Returns 1.0 for a perfectly balanced partition. Pass ``nranks``
+    explicitly when ranks may own zero cells — a starved rank inferred
+    away from ``assignment.max()`` would masquerade as perfect balance,
+    the one condition the trigger must fire on.
+    """
+    assignment = np.asarray(assignment, dtype=np.int64)
+    if nranks is None:
+        nranks = int(assignment.max()) + 1 if assignment.size else 1
+    w = timebin_node_weights(occupancy_by_bin)
+    rank_w = np.zeros(nranks)
+    np.add.at(rank_w, assignment, w)
+    mean = rank_w.mean()
+    if mean <= 0:
+        return 1.0
+    return float(rank_w.max() / mean)
+
+
 def decompose_cells(graph: TaskGraph, num_cells: int, nranks: int, *,
                     seed: int = 0, max_imbalance: float = 1.05,
                     cell_bytes: Optional[Sequence[float]] = None,
-                    node_weights: Optional[Sequence[float]] = None
+                    node_weights: Optional[Sequence[float]] = None,
+                    occupancy_by_bin: Optional[np.ndarray] = None
                     ) -> Decomposition:
     """Partition the computation (not just the data): SWIFT §3.2.
 
@@ -67,12 +111,21 @@ def decompose_cells(graph: TaskGraph, num_cells: int, nranks: int, *,
     *time-averaged* active work when particles carry per-particle
     time-steps (a graph built with ``time_average=True`` already carries
     these weights in its task costs, in which case no override is needed).
+
+    ``occupancy_by_bin`` (ncells, nbins) is the convenience form of the
+    same: per-cell time-bin occupancy histograms, converted internally via
+    :func:`timebin_node_weights`. This is the input the distributed
+    time-bin engine's repartition trigger feeds (see
+    :func:`bin_occupancy_imbalance`); explicit ``node_weights`` wins if
+    both are given.
     """
     node_w, edge_w = graph.cell_graph()
     vw = np.zeros(num_cells)
     for r, w in node_w.items():
         if r < num_cells:
             vw[r] = w
+    if node_weights is None and occupancy_by_bin is not None:
+        node_weights = timebin_node_weights(occupancy_by_bin)
     if node_weights is not None:
         vw = np.asarray(node_weights, dtype=np.float64).copy()
         if len(vw) != num_cells:

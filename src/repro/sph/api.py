@@ -1,0 +1,411 @@
+"""One front-end over the engine matrix: ``SimulationSpec`` → simulation.
+
+The repo grew three divergent entry points — :class:`~repro.sph.engine.
+Simulation` (global dt, single host), :class:`~repro.sph.timebins.
+TimeBinSimulation` (multi-dt, single host) and the device-mesh pipeline in
+``sph/distributed.py`` (global dt, distributed). Modern SWIFT (arXiv:
+2305.13380) treats integrator, engine policy and communication as
+*orthogonal configuration over one engine*; this module does the same:
+
+* :class:`SimulationSpec` — a frozen description of a run: scenario
+  (looked up in the :data:`SCENARIOS` registry), physics
+  (:class:`~repro.sph.engine.SPHConfig`), ``integrator`` ("global" |
+  "timebin"), ``backend`` ("local" | "distributed"), and halo / mesh /
+  time-bin options.
+* :func:`build_simulation` — compiles a spec into an object satisfying the
+  :class:`Simulation` protocol (``state``, ``step()``,
+  ``run(t_end, callbacks)``, ``diagnostics()``) regardless of quadrant.
+
+The four quadrants map onto engines as:
+
+==============  ============  ===============================================
+integrator      backend       engine
+==============  ============  ===============================================
+``"global"``    ``"local"``   ``engine.Simulation`` (jitted KDK waves)
+``"timebin"``   ``"local"``   ``timebins.TimeBinSimulation`` (KDK ladder)
+``"global"``    ``"distributed"``  ``distributed.DistSimulation``
+                               (shard_map halos: allgather / ring)
+``"timebin"``   ``"distributed"``  ``dist_timebins.DistTimeBinSimulation``
+                               (activity-aware halos over a rank partition)
+==============  ============  ===============================================
+
+The legacy constructors keep working as thin shims (they *are* the engine
+layer now); new code should go through ``build_simulation``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+import numpy as np
+
+from .engine import SPHConfig
+
+
+@contextlib.contextmanager
+def _engine_layer():
+    """The API building the engines is not a deprecated use of them."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        yield
+
+INTEGRATORS = ("global", "timebin")
+BACKENDS = ("local", "distributed")
+
+# ------------------------------------------------------------ scenario registry
+SCENARIOS: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {}
+
+
+def register_scenario(name: str):
+    """Register an initial-condition factory under ``name``.
+
+    The factory must return the standard IC dict: ``pos`` (n, 3), ``vel``,
+    ``mass``, ``u``, ``h`` arrays plus the scalar ``box``.
+    """
+    def deco(fn):
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def make_ic(scenario: str, **params) -> Dict[str, np.ndarray]:
+    """Instantiate a registered scenario's initial conditions."""
+    try:
+        fn = SCENARIOS[scenario]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {scenario!r}; registered: "
+            f"{sorted(SCENARIOS)}") from None
+    return fn(**params)
+
+
+def _register_builtin_scenarios():
+    from . import ic
+    SCENARIOS.setdefault("uniform", ic.uniform_ic)
+    SCENARIOS.setdefault("clustered", ic.clustered_ic)
+    SCENARIOS.setdefault("sedov", ic.sedov_ic)
+    SCENARIOS.setdefault("kelvin_helmholtz", ic.kelvin_helmholtz_ic)
+
+
+_register_builtin_scenarios()
+
+
+# -------------------------------------------------------------------- protocol
+@runtime_checkable
+class Simulation(Protocol):
+    """What every compiled simulation exposes, regardless of quadrant."""
+
+    @property
+    def state(self) -> Any: ...
+
+    @property
+    def time(self) -> float: ...
+
+    def step(self) -> Dict[str, Any]:
+        """Advance one unit of work (a step or a time-bin cycle); returns
+        per-step stats (at least ``t`` and ``dt``)."""
+        ...
+
+    def run(self, t_end: float, callbacks: Tuple[Callable, ...] = ()
+            ) -> Dict[str, list]:
+        """Advance until simulated time ≥ t_end; returns the run log."""
+        ...
+
+    def diagnostics(self) -> Tuple[float, np.ndarray]:
+        """(total energy, total momentum) over real particles."""
+        ...
+
+
+# ------------------------------------------------------------------------ spec
+@dataclass(frozen=True)
+class SimulationSpec:
+    """Frozen description of a run over the {integrator} × {backend} matrix.
+
+    ``scenario_params`` is passed to the registered scenario factory;
+    ``physics`` carries the SPH numerics (kernel, viscosity, CFL,
+    ``use_pallas`` for the fused pair kernels). Engine-policy fields are
+    ignored by quadrants they don't apply to (e.g. ``halo`` for local
+    backends) — orthogonality means a spec can be re-pointed at another
+    quadrant by changing one field.
+    """
+    scenario: str = "uniform"
+    scenario_params: Mapping[str, Any] = field(default_factory=dict)
+    physics: SPHConfig = field(default_factory=SPHConfig)
+    integrator: str = "global"             # "global" | "timebin"
+    backend: str = "local"                 # "local" | "distributed"
+
+    # global-dt policy
+    dt: Optional[float] = None             # fixed step; None → per-step CFL
+    rebin_every: int = 1
+
+    # time-bin policy
+    dt_max: Optional[float] = None         # cycle span; None → CFL max
+    max_depth: int = 10
+    bin_delta: int = 2
+    depth_headroom: int = 2
+
+    # distributed policy
+    ranks: Optional[int] = None            # None → one per local device
+    halo: str = "allgather"                # "allgather" | "ring" (global-dt)
+    mesh_axis: str = "data"
+    activity_aware_halos: bool = True      # time-bin × distributed
+    repartition_threshold: float = 1.5
+    seed: int = 0
+
+    # shared
+    capacity_margin: float = 3.0
+
+    def __post_init__(self):
+        if self.integrator not in INTEGRATORS:
+            raise ValueError(
+                f"integrator must be one of {INTEGRATORS}, "
+                f"got {self.integrator!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        if self.scenario not in SCENARIOS:
+            raise ValueError(
+                f"unknown scenario {self.scenario!r}; registered: "
+                f"{sorted(SCENARIOS)}")
+        if self.halo not in ("allgather", "ring"):
+            raise ValueError(f"halo must be 'allgather' or 'ring', "
+                             f"got {self.halo!r}")
+
+    def with_(self, **changes) -> "SimulationSpec":
+        """A copy with the given fields replaced (specs are frozen)."""
+        return dataclasses.replace(self, **changes)
+
+
+# ------------------------------------------------------------------- adapters
+class _SimulationBase:
+    """Shared ``run`` / log plumbing of the quadrant adapters."""
+
+    spec: SimulationSpec
+
+    @property
+    def time(self) -> float:
+        raise NotImplementedError
+
+    def step(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def diagnostics(self) -> Tuple[float, np.ndarray]:
+        raise NotImplementedError
+
+    def run(self, t_end: float, callbacks: Tuple[Callable, ...] = ()
+            ) -> Dict[str, list]:
+        log: Dict[str, list] = {"t": [], "dt": [], "E": [], "px": [],
+                                "wall": []}
+        # slack sized for float32 time accumulation (ulp ~1e-7 per step):
+        # dt dividing t_end exactly must not trigger a spurious extra step
+        while self.time < t_end * (1.0 - 1e-5):
+            stats = self.step()
+            e, p = self.diagnostics()
+            log["t"].append(float(stats["t"]))
+            log["dt"].append(float(stats.get("dt", stats.get("dt_max", 0.0))))
+            log["E"].append(e)
+            log["px"].append(float(p[0]))
+            log["wall"].append(float(stats.get("wall", 0.0)))
+            for cb in callbacks:
+                cb(self, stats)
+        return log
+
+
+class _LocalGlobal(_SimulationBase):
+    """global × local: the jitted single-host KDK engine."""
+
+    def __init__(self, spec: SimulationSpec, ic: Dict[str, np.ndarray]):
+        from .engine import Simulation as _Engine
+        self.spec = spec
+        with _engine_layer():
+            self.engine = _Engine(ic["pos"], ic["vel"], ic["mass"], ic["u"],
+                                  ic["h"], box=float(ic["box"]),
+                                  cfg=spec.physics,
+                                  capacity_margin=spec.capacity_margin,
+                                  rebin_every=spec.rebin_every)
+
+    @property
+    def state(self):
+        return self.engine.state
+
+    @property
+    def time(self) -> float:
+        return float(self.engine.state.time)
+
+    def step(self) -> Dict[str, Any]:
+        import time as _time
+        t0 = _time.perf_counter()
+        if self.spec.dt is not None:
+            dt = float(self.spec.dt)
+        else:
+            from .engine import cfl_timestep
+            dt = float(cfl_timestep(self.engine.state, self.spec.physics))
+        self.engine.run(1, dt=dt)
+        return {"t": self.time, "dt": dt,
+                "wall": _time.perf_counter() - t0}
+
+    def diagnostics(self):
+        return self.engine.diagnostics()
+
+
+class _LocalTimeBin(_SimulationBase):
+    """timebin × local: the hierarchical KDK ladder."""
+
+    def __init__(self, spec: SimulationSpec, ic: Dict[str, np.ndarray]):
+        from .timebins import TimeBinSimulation
+        self.spec = spec
+        with _engine_layer():
+            self.engine = TimeBinSimulation(
+                ic["pos"], ic["vel"], ic["mass"], ic["u"], ic["h"],
+                box=float(ic["box"]), cfg=spec.physics, dt_max=spec.dt_max,
+                max_depth=spec.max_depth, bin_delta=spec.bin_delta,
+                depth_headroom=spec.depth_headroom,
+                capacity_margin=spec.capacity_margin)
+
+    @property
+    def state(self):
+        return self.engine.state
+
+    @property
+    def time(self) -> float:
+        return float(self.engine.state.time)
+
+    def step(self) -> Dict[str, Any]:
+        stats = self.engine.run_cycle()
+        stats["dt"] = stats["dt_max"]
+        return stats
+
+    def diagnostics(self):
+        return self.engine.diagnostics()
+
+
+class _DistGlobal(_SimulationBase):
+    """global × distributed: graph-partitioned cells on a device mesh."""
+
+    def __init__(self, spec: SimulationSpec, ic: Dict[str, np.ndarray]):
+        import jax
+        from jax.sharding import Mesh
+        from .cellgrid import bin_particles, build_pair_list, choose_grid
+        from .distributed import DistSimulation
+        self.spec = spec
+        self.box = float(ic["box"])
+        n = len(ic["pos"])
+        ndev = spec.ranks or len(jax.devices())
+        if ndev > len(jax.devices()):
+            raise ValueError(
+                f"global×distributed lowers to shard_map and needs "
+                f"ranks={ndev} real devices (have {len(jax.devices())}); "
+                f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{ndev} or use integrator='timebin', whose rank "
+                f"partition is device-independent")
+        gspec = choose_grid(self.box, float(np.max(ic["h"])), n,
+                            capacity_margin=spec.capacity_margin)
+        cells, self.perm = bin_particles(gspec, ic["pos"], ic["vel"],
+                                         ic["mass"], ic["u"], ic["h"])
+        pairs = build_pair_list(gspec)
+        mesh = Mesh(np.array(jax.devices()[:ndev]), (spec.mesh_axis,))
+        with _engine_layer():
+            self.engine = DistSimulation(cells, pairs, gspec, mesh,
+                                         cfg=spec.physics,
+                                         axis=spec.mesh_axis,
+                                         halo=spec.halo, seed=spec.seed)
+        self._time = 0.0
+
+    @property
+    def state(self):
+        return self.engine.dcells
+
+    @property
+    def time(self) -> float:
+        return self._time
+
+    def _dt(self) -> float:
+        if self.spec.dt is not None:
+            return float(self.spec.dt)
+        from .physics import cfl_timestep_block
+        import jax.numpy as jnp
+        c = self.engine.gather_cells()
+        dts = cfl_timestep_block(c.h, c.u, c.vel, c.mask,
+                                 gamma=self.spec.physics.gamma,
+                                 cfl=self.spec.physics.cfl)
+        return float(jnp.min(dts))
+
+    def step(self) -> Dict[str, Any]:
+        import time as _time
+        t0 = _time.perf_counter()
+        dt = self._dt()
+        self.engine.step(dt)
+        self._time += dt
+        return {"t": self._time, "dt": dt,
+                "wall": _time.perf_counter() - t0}
+
+    def diagnostics(self):
+        c = self.engine.gather_cells()
+        m = np.asarray(c.mass * c.mask)
+        v = np.asarray(c.vel)
+        u = np.asarray(c.u)
+        ke = 0.5 * np.sum(m * np.sum(v * v, axis=-1))
+        ie = np.sum(m * u)
+        mom = np.sum(m[..., None] * v, axis=(0, 1))
+        return float(ke + ie), mom
+
+
+class _DistTimeBin(_SimulationBase):
+    """timebin × distributed: activity-aware halos over a rank partition."""
+
+    def __init__(self, spec: SimulationSpec, ic: Dict[str, np.ndarray]):
+        import jax
+        from .dist_timebins import DistTimeBinSimulation
+        self.spec = spec
+        nranks = spec.ranks if spec.ranks is not None else len(jax.devices())
+        self.engine = DistTimeBinSimulation(
+            ic["pos"], ic["vel"], ic["mass"], ic["u"], ic["h"],
+            box=float(ic["box"]), cfg=spec.physics, nranks=nranks,
+            activity_aware=spec.activity_aware_halos,
+            repartition_threshold=spec.repartition_threshold,
+            seed=spec.seed, dt_max=spec.dt_max, max_depth=spec.max_depth,
+            bin_delta=spec.bin_delta, depth_headroom=spec.depth_headroom,
+            capacity_margin=spec.capacity_margin)
+
+    @property
+    def state(self):
+        return self.engine.state
+
+    @property
+    def time(self) -> float:
+        return float(self.engine.state.time)
+
+    def step(self) -> Dict[str, Any]:
+        stats = self.engine.run_cycle()
+        stats["dt"] = stats["dt_max"]
+        return stats
+
+    def diagnostics(self):
+        return self.engine.diagnostics()
+
+
+_QUADRANTS = {
+    ("global", "local"): _LocalGlobal,
+    ("timebin", "local"): _LocalTimeBin,
+    ("global", "distributed"): _DistGlobal,
+    ("timebin", "distributed"): _DistTimeBin,
+}
+
+
+def build_simulation(spec: SimulationSpec,
+                     ic: Optional[Dict[str, np.ndarray]] = None
+                     ) -> _SimulationBase:
+    """Compile a :class:`SimulationSpec` into a running simulation.
+
+    ``ic`` overrides the scenario lookup (pre-built initial conditions in
+    the standard dict form) — the scenario registry is the default path.
+    """
+    if ic is None:
+        ic = make_ic(spec.scenario, **dict(spec.scenario_params))
+    cls = _QUADRANTS[(spec.integrator, spec.backend)]
+    return cls(spec, ic)

@@ -1,0 +1,558 @@
+"""Distributed hierarchical time-bin integration with activity-aware halos.
+
+The missing quadrant of the {global-dt, time-bin} × {local, distributed}
+matrix: per-particle power-of-two time-steps (``timebins.py``) over a
+graph-partitioned cell decomposition (``core.decompose``), where halo
+exchanges are **activity-aware** — at each sub-step only the cut cells with
+bins active at that sub-step contribute to the export buffer. An inactive
+boundary cell's replica stays valid on the importing rank because drift is
+elementwise: the importer drifts its halo copies with exactly the owner's
+arithmetic, so data only has to ship when a kick actually changes it.
+This is the time-axis extension of SWIFT's halo protocol (§3.3): the
+communication volume per sub-step tracks the *active* fraction of the cut,
+not its size — on a Sedov blast the quiescent background's boundary cells
+ship (almost) nothing between cycle synchronisation points.
+
+Structure of one force sub-step on each rank (two comm phases, exactly as
+the paper's step — positions are already local via replica drift):
+
+1. density phase (``timebins._substep_density_phase``) over the rank's
+   activity-restricted pair list → fresh rho/omega/press/cs for active
+   particles;
+2. **exchange 1**: owners ship (rho, omega, press, cs) of *active* cut
+   cells — the importer's locally-computed values for those rows are
+   partial sums and are overwritten;
+3. force phase (``timebins._substep_force_phase``) → kick + bin deepening;
+4. **exchange 2**: owners ship the kicked state (vel, u, bins, t_start,
+   accel, dudt) of active cut cells so replicas stay current.
+
+Cut pair tasks are duplicated on both ranks (the paper's Fig. 2 green
+tasks): every rank's pair list covers all pairs touching its owned cells,
+so owned active particles always receive complete interaction sums.
+
+Transport is host-mediated (numpy buffer copies between the ranks' jitted
+phase programs): the rank-partitioned state, the export/import plan, the
+per-sub-step buffer compaction and the message accounting are the real
+protocol; the wire lowering (``lax.ppermute`` rounds / ``all_gather``) is
+the same machinery ``sph/distributed.py`` already uses for the global-dt
+engine and is independent of everything implemented here. With ``nranks=1``
+the engine reduces to the single-host ladder bit-for-bit (asserted in
+``tests/test_api.py``).
+
+Repartitioning uses per-rank **bin occupancy**: the decomposition is
+retriggered when the time-averaged active work per rank
+(``core.decompose.timebin_node_weights``) drifts out of balance, and the
+new partition is computed from the cycle-averaged task costs
+(``CostModel.timebin_units``), weighting send/recv by activation frequency.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import CostModel, decompose_cells
+from ..core.decompose import timebin_node_weights
+from .cellgrid import PairList, ParticleCells
+from .engine import SPHConfig, build_taskgraph
+from .timebins import (TimeBinSimulation, TimeBinState, _final_force_phase,
+                       _substep_density_phase, _substep_force_phase,
+                       active_level, cell_bin_histogram, substep_active_mask)
+
+_PAD_H = 1e-6          # padded-slot smoothing length (division-safe)
+
+# scalars shipped per particle slot in each exchange (for byte accounting):
+# exchange 1: rho, omega, press, cs; exchange 2: vel(3), u, bins, t_start,
+# accel(3), dudt
+_EX1_FIELDS = 4
+_EX2_FIELDS = 10
+
+
+# ------------------------------------------------------------------ rank plan
+@dataclass
+class RankPlan:
+    """Host-side plan of one decomposition: who owns what, who imports what.
+
+    Extended row layout per rank: rows [0, K) hold owned cells (global cell
+    order), rows [K, K+H) hold halo replicas; both padded uniformly so every
+    rank shares one compiled program per pair-bucket size.
+    """
+    nranks: int
+    K: int                              # owned rows per rank (padded max)
+    H: int                              # halo rows per rank (padded max)
+    assignment: np.ndarray              # (ncells,) -> rank
+    owned: List[np.ndarray]             # per rank: global cell ids, in order
+    halo: List[np.ndarray]              # per rank: imported global cell ids
+    ext_row: np.ndarray                 # (nranks, ncells) cell -> ext row (-1)
+    # cut cells: cell -> (owner rank, owner ext row, [(imp rank, imp row)])
+    cut: Dict[int, Tuple[int, int, List[Tuple[int, int]]]] = \
+        field(default_factory=dict)
+    # per-rank global-pair membership and ext-index maps
+    touch: List[np.ndarray] = field(default_factory=list)   # (npairs,) bool
+    ci_ext: List[np.ndarray] = field(default_factory=list)  # (npairs,) int32
+    cj_ext: List[np.ndarray] = field(default_factory=list)  # (npairs,) int32
+
+    @property
+    def cut_slots(self) -> int:
+        """Total (cell, importer) slots across the cut = full-boundary
+        export volume of one exchange."""
+        return sum(len(imps) for _, _, imps in self.cut.values())
+
+
+def build_rank_plan(assignment: np.ndarray, ci: np.ndarray, cj: np.ndarray,
+                    nranks: Optional[int] = None) -> RankPlan:
+    """Ownership + halo-import plan over the global cell-pair list."""
+    assignment = np.asarray(assignment, dtype=np.int64)
+    ncells = len(assignment)
+    if nranks is None:
+        nranks = int(assignment.max()) + 1 if ncells else 1
+    owned = [np.nonzero(assignment == r)[0] for r in range(nranks)]
+    K = max((len(o) for o in owned), default=1)
+    K = max(K, 1)
+
+    imports: List[Dict[int, int]] = [dict() for _ in range(nranks)]
+    for a, b in zip(np.asarray(ci), np.asarray(cj)):
+        a, b = int(a), int(b)
+        ra, rb = int(assignment[a]), int(assignment[b])
+        if ra == rb:
+            continue
+        if b not in imports[ra]:
+            imports[ra][b] = len(imports[ra])
+        if a not in imports[rb]:
+            imports[rb][a] = len(imports[rb])
+    H = max((len(i) for i in imports), default=0)
+
+    halo = []
+    ext_row = np.full((nranks, ncells), -1, dtype=np.int64)
+    for r in range(nranks):
+        for slot, c in enumerate(owned[r]):
+            ext_row[r, c] = slot
+        hl = np.empty(len(imports[r]), dtype=np.int64)
+        for c, idx in imports[r].items():
+            hl[idx] = c
+            ext_row[r, c] = K + idx
+        halo.append(hl)
+
+    cut: Dict[int, Tuple[int, int, List[Tuple[int, int]]]] = {}
+    for r in range(nranks):
+        for c, idx in imports[r].items():
+            o = int(assignment[c])
+            if c not in cut:
+                cut[c] = (o, int(ext_row[o, c]), [])
+            cut[c][2].append((r, K + idx))
+
+    plan = RankPlan(nranks=nranks, K=K, H=H, assignment=assignment,
+                    owned=owned, halo=halo, ext_row=ext_row, cut=cut)
+    ci_np = np.asarray(ci, dtype=np.int64)
+    cj_np = np.asarray(cj, dtype=np.int64)
+    for r in range(nranks):
+        touch = (assignment[ci_np] == r) | (assignment[cj_np] == r)
+        cie = np.where(touch, ext_row[r, ci_np], 0).astype(np.int32)
+        cje = np.where(touch, ext_row[r, cj_np], 0).astype(np.int32)
+        plan.touch.append(touch)
+        plan.ci_ext.append(cie)
+        plan.cj_ext.append(cje)
+    return plan
+
+
+def halo_export_schedule(cell_bins: np.ndarray, plan: RankPlan, depth: int
+                         ) -> Dict[str, np.ndarray]:
+    """Static per-sub-step export volumes over one 2**depth cycle.
+
+    ``cell_bins`` is each cell's deepest occupied bin (−1 empty). A cut cell
+    ships to each of its importers when active (bin ≥ level of the
+    sub-step); the full-boundary baseline ships every cut cell at every
+    force sub-step. Pure host arithmetic — the fast check that
+    activity-aware halos beat the baseline, without running the engine.
+    """
+    nsub = 1 << depth
+    active_slots = np.zeros(nsub, dtype=np.int64)
+    full_slots = np.zeros(nsub, dtype=np.int64)
+    bins = np.asarray(cell_bins)
+    for n in range(1, nsub + 1):
+        level = 0 if n == nsub else active_level(n, depth)
+        any_active = bool((bins >= level).any())
+        if not any_active:
+            continue
+        full = plan.cut_slots
+        act = sum(len(imps) for c, (_, _, imps) in plan.cut.items()
+                  if bins[c] >= level)
+        active_slots[n - 1] = act
+        full_slots[n - 1] = full
+    return {"active": active_slots, "full": full_slots}
+
+
+# ------------------------------------------------------------------- driver
+class DistTimeBinSimulation(TimeBinSimulation):
+    """Rank-partitioned multi-dt driver (the distributed ``timebin`` engine).
+
+    Inherits the cycle planner, bin math and host bookkeeping from
+    :class:`TimeBinSimulation`; overrides the sub-step ladder to run on
+    per-rank extended (owned ⊕ halo) states with the two activity-aware
+    exchanges described in the module docstring. Export volumes are
+    accumulated in ``halo_exported_slots`` / ``halo_full_slots``;
+    ``halo_log`` holds the *latest cycle's* per-sub-step breakdown (reset
+    each cycle so long runs stay bounded).
+    """
+
+    def __init__(self, pos, vel, mass, u, h, *, box: float,
+                 cfg: SPHConfig = SPHConfig(),
+                 nranks: int = 1,
+                 activity_aware: bool = True,
+                 repartition_threshold: float = 1.5,
+                 cost_model: Optional[CostModel] = None,
+                 seed: int = 0,
+                 **kw):
+        self.nranks = int(nranks)
+        self.activity_aware = bool(activity_aware)
+        self.repartition_threshold = float(repartition_threshold)
+        self._cost_model = cost_model or CostModel(rates={})
+        self._seed = seed
+        super().__init__(pos, vel, mass, u, h, box=box, cfg=cfg, **kw)
+        self._jit_sub_density = jax.jit(functools.partial(
+            self._sub_density, cfg=cfg))
+        self._jit_sub_force = jax.jit(functools.partial(
+            _substep_force_phase, cfg=cfg))
+        self._jit_final_density = jax.jit(functools.partial(
+            self._final_density, cfg=cfg))
+        self._jit_final_force = jax.jit(functools.partial(
+            _final_force_phase, cfg=cfg))
+        self._assignment = self._initial_assignment()
+        self.repartitions = 0
+        self.halo_exported_slots = 0
+        self.halo_full_slots = 0
+        self.halo_log: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------- jitted phases
+    @staticmethod
+    def _sub_density(state, pairs, pair_mask, level, wake_floor, *, cfg):
+        active = substep_active_mask(state, level, wake_floor)
+        rho, omega, press, cs = _substep_density_phase(
+            state, pairs, pair_mask, active, cfg=cfg)
+        return active, rho, omega, press, cs
+
+    @staticmethod
+    def _final_density(state, pairs, pair_mask, *, cfg):
+        active = state.cells.mask
+        return _substep_density_phase(state, pairs, pair_mask, active,
+                                      cfg=cfg)
+
+    # ---------------------------------------------------------- partitioning
+    def _initial_assignment(self) -> np.ndarray:
+        if self.nranks <= 1:
+            return np.zeros(self.spec.ncells, dtype=np.int64)
+        occ = np.asarray(self.state.cells.mask).sum(axis=1).astype(np.int64)
+        g = build_taskgraph(self.spec, self.pairs, occ, self._cost_model)
+        dec = decompose_cells(g, self.spec.ncells, self.nranks,
+                              seed=self._seed)
+        return np.asarray(dec.assignment, dtype=np.int64)
+
+    def _maybe_repartition(self, bins_h: np.ndarray, mask_h: np.ndarray,
+                           depth: int) -> None:
+        """Per-rank bin-occupancy repartition trigger.
+
+        The quantity balanced is the *time-averaged active work* per rank
+        (``timebin_node_weights``): deep-bin (short-step) cells cost their
+        rank every sub-step, shallow ones almost never. When the max/mean
+        ratio exceeds the threshold, re-decompose with cycle-averaged task
+        costs (``CostModel.timebin_units`` — send/recv weighted by
+        activation frequency).
+        """
+        if self.nranks <= 1:
+            return
+        obb = cell_bin_histogram(bins_h, mask_h, depth + 1)
+        w = timebin_node_weights(obb)
+        rank_w = np.zeros(self.nranks)
+        np.add.at(rank_w, self._assignment, w)
+        mean = rank_w.mean()
+        if mean <= 0 or rank_w.max() / mean <= self.repartition_threshold:
+            return
+        occ = (mask_h > 0).sum(axis=1).astype(np.int64)
+        deep = (obb.shape[1] - 1 - np.argmax(obb[:, ::-1] > 0, axis=1))
+        cb = np.where(obb.sum(axis=1) > 0, deep, -1)
+        g = build_taskgraph(self.spec, self.pairs, occ, self._cost_model,
+                            cell_bins=cb, occupancy_by_bin=obb,
+                            time_average=True)
+        dec = decompose_cells(g, self.spec.ncells, self.nranks,
+                              seed=self._seed, occupancy_by_bin=obb)
+        self._assignment = np.asarray(dec.assignment, dtype=np.int64)
+        self.repartitions += 1
+
+    # ------------------------------------------------------ scatter / gather
+    def _scatter_state(self, plan: RankPlan) -> List[TimeBinState]:
+        """Global mirror → per-rank extended TimeBinStates."""
+        st = self.state
+        fills = {"pos": 0.0, "vel": 0.0, "mass": 0.0, "u": 0.0,
+                 "h": _PAD_H, "mask": 0.0, "accel": 0.0, "dudt": 0.0,
+                 "rho": 1.0, "omega": 1.0, "bins": 0, "t_start": 0.0}
+        states = []
+        for r in range(plan.nranks):
+            idx = np.concatenate([plan.owned[r], plan.halo[r]]).astype(int)
+            split = len(plan.owned[r])
+            nrows = plan.K + plan.H
+
+            def ext(a, fill):
+                a = np.asarray(a)
+                out = np.full((nrows,) + a.shape[1:], fill, dtype=a.dtype)
+                out[:split] = a[plan.owned[r]]
+                out[plan.K:plan.K + len(plan.halo[r])] = a[plan.halo[r]]
+                return jnp.asarray(out)
+
+            cells = ParticleCells(
+                pos=ext(st.cells.pos, fills["pos"]),
+                vel=ext(st.cells.vel, fills["vel"]),
+                mass=ext(st.cells.mass, fills["mass"]),
+                u=ext(st.cells.u, fills["u"]),
+                h=ext(st.cells.h, fills["h"]),
+                mask=ext(st.cells.mask, fills["mask"]))
+            states.append(TimeBinState(
+                cells=cells,
+                accel=ext(st.accel, fills["accel"]),
+                dudt=ext(st.dudt, fills["dudt"]),
+                rho=ext(st.rho, fills["rho"]),
+                omega=ext(st.omega, fills["omega"]),
+                bins=ext(st.bins, fills["bins"]),
+                t_start=ext(st.t_start, fills["t_start"]),
+                time=st.time))
+        return states
+
+    def _gather_state(self, plan: RankPlan, states: List[TimeBinState]
+                      ) -> None:
+        """Per-rank owned rows → global mirror (halo replicas discarded)."""
+        st = self.state
+        out = {name: np.asarray(getattr(st, name)).copy()
+               for name in ("accel", "dudt", "rho", "omega", "bins",
+                            "t_start")}
+        cells_out = {name: np.asarray(getattr(st.cells, name)).copy()
+                     for name in ("pos", "vel", "mass", "u", "h", "mask")}
+        for r in range(plan.nranks):
+            own = plan.owned[r]
+            if not len(own):
+                continue
+            sr = states[r]
+            for name in out:
+                out[name][own] = np.asarray(getattr(sr, name))[:len(own)]
+            for name in cells_out:
+                cells_out[name][own] = np.asarray(
+                    getattr(sr.cells, name))[:len(own)]
+        self.state = TimeBinState(
+            cells=ParticleCells(**{k: jnp.asarray(v)
+                                   for k, v in cells_out.items()}),
+            time=states[0].time,
+            **{k: jnp.asarray(v) for k, v in out.items()})
+
+    # --------------------------------------------------------- pair subsets
+    def _rank_pair_subset(self, plan: RankPlan, r: int,
+                          active_cells: Optional[np.ndarray]
+                          ) -> Tuple[PairList, jax.Array, int]:
+        """Rank r's pairs (touching its owned cells), restricted to pairs
+        touching an active cell, padded to a power-of-two length — the
+        rank-local image of ``TimeBinSimulation._pair_subset``."""
+        sel = plan.touch[r]
+        if active_cells is not None:
+            sel = sel & (active_cells[self._ci] | active_cells[self._cj])
+        idx = np.nonzero(sel)[0]
+        nlive = len(idx)
+        npad = 1
+        while npad < max(nlive, 1):
+            npad *= 2
+        pad = np.zeros(npad - nlive, dtype=idx.dtype)
+        idxp = np.concatenate([idx, pad])
+        pmask = np.zeros(npad, np.float32)
+        pmask[:nlive] = 1.0
+        sub = PairList(ci=jnp.asarray(plan.ci_ext[r][idxp]),
+                       cj=jnp.asarray(plan.cj_ext[r][idxp]),
+                       shift=jnp.asarray(self._shift[idxp]))
+        return sub, jnp.asarray(pmask), nlive
+
+    # ------------------------------------------------------------ exchanges
+    def _exchange_set(self, plan: RankPlan, active_cells: np.ndarray
+                      ) -> List[int]:
+        """Cut cells due for shipping this sub-step."""
+        if not self.activity_aware:
+            return list(plan.cut.keys())
+        return [c for c in plan.cut if active_cells[c]]
+
+    @staticmethod
+    def _copy_rows(plan: RankPlan, cells_due: List[int],
+                   arrays: List[List[np.ndarray]]) -> None:
+        """Owner row → importer rows, for each field array set.
+
+        ``arrays[f][r]`` is rank r's numpy view of field f (ext rows
+        leading). Mutates importer rows in place.
+        """
+        for c in cells_due:
+            o, orow, imps = plan.cut[c]
+            for f in range(len(arrays)):
+                src = arrays[f][o][orow]
+                for (ir, irow) in imps:
+                    arrays[f][ir][irow] = src
+
+    # -------------------------------------------------------------- cycling
+    def run_cycle(self) -> Dict[str, float]:
+        import time as _time
+        t0 = _time.perf_counter()
+        dt_max_c, depth = self._plan_cycle()
+        nsub = 1 << depth
+        dt_min = dt_max_c / nsub
+        nreal = int(np.asarray(self.state.cells.mask).sum())
+        bins_host = np.asarray(self.state.bins)
+        mask_host = np.asarray(self.state.cells.mask)
+        m_h = np.asarray(self.state.cells.mass * self.state.cells.mask)
+        u_floor = float((m_h * np.asarray(self.state.cells.u)).sum()
+                        / max(m_h.sum(), 1e-30))
+        hist = np.bincount(bins_host[mask_host > 0], minlength=depth + 1)
+
+        # opening half-kick on the global mirror, then scatter to ranks
+        self.state = self._jit_start(self.state, jnp.float32(dt_max_c))
+        plan = build_rank_plan(np.asarray(self._assignment), self._ci,
+                               self._cj, nranks=self.nranks)
+        states = self._scatter_state(plan)
+
+        updates = 0
+        pair_tasks = 0
+        force_substeps = 0
+        drifted_to = 0
+        cycle_exported = 0
+        cycle_full = 0
+        self.halo_log = []          # latest cycle only (bounded memory)
+        bins_h = bins_host.copy()
+        wake_floor = self._wake_floor(bins_h, mask_host)
+
+        def wake_ext(r):
+            wf = np.zeros(plan.K + plan.H, np.int32)
+            wf[:len(plan.owned[r])] = wake_floor[plan.owned[r]]
+            wf[plan.K:plan.K + len(plan.halo[r])] = wake_floor[plan.halo[r]]
+            return jnp.asarray(wf)
+
+        for n in range(1, nsub):
+            level = active_level(n, depth)
+            active_p = ((bins_h >= level)
+                        | (bins_h < wake_floor[:, None])) & (mask_host > 0)
+            if not active_p.any():
+                continue
+            active_cells = active_p.any(axis=1)
+            ship = self._exchange_set(plan, active_cells)
+            nship = sum(len(plan.cut[c][2]) for c in ship)
+            cycle_exported += nship
+            cycle_full += plan.cut_slots
+            self.halo_log.append({
+                "substep": self.substeps + n, "level": level,
+                "exported_slots": nship, "full_slots": plan.cut_slots})
+
+            dt_d = jnp.float32((n - drifted_to) * dt_min)
+            drifted_to = n
+            phase1 = []
+            for r in range(plan.nranks):
+                states[r] = self._jit_drift(states[r], dt_d)
+                sub, pmask, nlive = self._rank_pair_subset(
+                    plan, r, active_cells)
+                act, rho, om, pr, cs = self._jit_sub_density(
+                    states[r], sub, pmask, jnp.int32(level), wake_ext(r))
+                phase1.append([sub, pmask, nlive, act, rho, om, pr, cs])
+            # exchange 1: owner's fresh rho/omega/press/cs -> replicas
+            if plan.cut and ship:
+                f_np = [[np.array(phase1[r][4 + f])
+                         for r in range(plan.nranks)] for f in range(4)]
+                self._copy_rows(plan, ship, f_np)
+                for r in range(plan.nranks):
+                    phase1[r][4:] = [jnp.asarray(f_np[f][r])
+                                     for f in range(4)]
+            for r in range(plan.nranks):
+                sub, pmask, nlive, act, rho, om, pr, cs = phase1[r]
+                states[r], _ = self._jit_sub_force(
+                    states[r], sub, pmask, act, rho, om, pr, cs,
+                    wake_ext(r), jnp.float32(dt_max_c), jnp.int32(depth),
+                    jnp.float32(u_floor))
+            # exchange 2: kicked state of shipped cells -> replicas
+            if plan.cut and ship:
+                vel = [np.array(states[r].cells.vel)
+                       for r in range(plan.nranks)]
+                uu = [np.array(states[r].cells.u)
+                      for r in range(plan.nranks)]
+                bb = [np.array(states[r].bins)
+                      for r in range(plan.nranks)]
+                ts = [np.array(states[r].t_start)
+                      for r in range(plan.nranks)]
+                ac = [np.array(states[r].accel)
+                      for r in range(plan.nranks)]
+                dd = [np.array(states[r].dudt)
+                      for r in range(plan.nranks)]
+                self._copy_rows(plan, ship, [vel, uu, bb, ts, ac, dd])
+                for r in range(plan.nranks):
+                    states[r] = states[r]._replace(
+                        cells=states[r].cells._replace(
+                            vel=jnp.asarray(vel[r]), u=jnp.asarray(uu[r])),
+                        bins=jnp.asarray(bb[r]),
+                        t_start=jnp.asarray(ts[r]),
+                        accel=jnp.asarray(ac[r]),
+                        dudt=jnp.asarray(dd[r]))
+            # refresh the global bins mirror (deepening) and wake floors
+            for r in range(plan.nranks):
+                own = plan.owned[r]
+                if len(own):
+                    bins_h[own] = np.asarray(states[r].bins)[:len(own)]
+            wake_floor = self._wake_floor(bins_h, mask_host)
+            updates += int(active_p.sum())
+            pair_tasks += int((active_cells[self._ci]
+                               | active_cells[self._cj]).sum())
+            force_substeps += 1
+
+        # final sync sub-step: everyone active, full pair lists, full cut
+        dt_d = jnp.float32((nsub - drifted_to) * dt_min)
+        phase1 = []
+        for r in range(plan.nranks):
+            states[r] = self._jit_drift(states[r], dt_d)
+            sub, pmask, nlive = self._rank_pair_subset(plan, r, None)
+            rho, om, pr, cs = self._jit_final_density(states[r], sub, pmask)
+            phase1.append([sub, pmask, nlive, rho, om, pr, cs])
+        if plan.cut:
+            ship = list(plan.cut.keys())
+            nship = sum(len(plan.cut[c][2]) for c in ship)
+            cycle_exported += nship
+            cycle_full += plan.cut_slots
+            f_np = [[np.array(phase1[r][3 + f])
+                     for r in range(plan.nranks)] for f in range(4)]
+            self._copy_rows(plan, ship, f_np)
+            for r in range(plan.nranks):
+                phase1[r][3:] = [jnp.asarray(f_np[f][r]) for f in range(4)]
+        for r in range(plan.nranks):
+            sub, pmask, nlive, rho, om, pr, cs = phase1[r]
+            states[r] = self._jit_final_force(
+                states[r], sub, pmask, rho, om, pr, cs,
+                jnp.float32(dt_max_c))
+        jax.block_until_ready(states[-1].cells.pos)
+        updates += nreal
+        pair_tasks += len(self._ci)
+
+        self._gather_state(plan, states)
+        self._maybe_repartition(np.asarray(self.state.bins),
+                                np.asarray(self.state.cells.mask), depth)
+        if self.rebin_each_cycle:
+            self._rebin_state()
+        self.particle_updates += updates
+        self.global_equiv_updates += nsub * nreal
+        self.substeps += nsub
+        self.halo_exported_slots += cycle_exported
+        self.halo_full_slots += cycle_full
+        return {
+            "t": float(self.state.time),
+            "dt_max": dt_max_c,
+            "depth": depth,
+            "substeps": nsub,
+            "force_substeps": force_substeps + 1,
+            "bin_hist": hist,
+            "updates": updates,
+            "global_equiv_updates": nsub * nreal,
+            "pair_tasks": pair_tasks,
+            "global_equiv_pair_tasks": nsub * len(self._ci),
+            "halo_exported_slots": cycle_exported,
+            "halo_full_slots": cycle_full,
+            "nranks": plan.nranks,
+            "wall": _time.perf_counter() - t0,
+        }

@@ -417,6 +417,13 @@ class DistSimulation:
                  spec: GridSpec, mesh: Mesh, *, cfg: SPHConfig = SPHConfig(),
                  axis: str = "data", halo: str = "allgather",
                  cost_model: Optional[CostModel] = None, seed: int = 0):
+        if type(self) is DistSimulation:
+            import warnings
+            warnings.warn(
+                "constructing DistSimulation directly is deprecated; use "
+                "repro.sph.build_simulation(SimulationSpec(...)) "
+                "(integrator='global', backend='distributed')",
+                DeprecationWarning, stacklevel=2)
         self.spec = spec
         self.cfg = cfg
         self.mesh = mesh

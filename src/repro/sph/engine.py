@@ -16,6 +16,7 @@ their cells").
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, NamedTuple, Optional, Tuple
 
@@ -296,12 +297,23 @@ def build_taskgraph(spec: GridSpec, pairs: PairList,
 
 # ------------------------------------------------------------------ driver
 class Simulation:
-    """Host-side driver: binning, jitted stepping, re-binning, diagnostics."""
+    """Host-side driver: binning, jitted stepping, re-binning, diagnostics.
+
+    .. deprecated:: constructing this directly is the legacy path; it is
+       now the global×local *engine* behind ``repro.sph.build_simulation(
+       SimulationSpec(integrator="global", backend="local"))``.
+    """
 
     def __init__(self, pos, vel, mass, u, h, *, box: float,
                  cfg: SPHConfig = SPHConfig(),
                  capacity_margin: float = 3.0,
                  rebin_every: int = 1):
+        if type(self) is Simulation:
+            warnings.warn(
+                "constructing repro.sph.Simulation directly is deprecated; "
+                "use repro.sph.build_simulation(SimulationSpec(...)) "
+                "(integrator='global', backend='local')",
+                DeprecationWarning, stacklevel=2)
         self.box = float(box)
         self.cfg = cfg
         self.n = len(pos)

@@ -75,6 +75,45 @@ def sedov_ic(n_side: int, *, box: float = 1.0, e0: float = 1.0,
     return ic
 
 
+def kelvin_helmholtz_ic(n_side: int, *, box: float = 1.0,
+                        v_shear: float = 0.5, u0: float = 1.0,
+                        perturb: float = 0.05, modes: int = 2,
+                        layer_width: float = 0.05, jitter: float = 0.02,
+                        seed: int = 0,
+                        n_target: float = 48.0) -> Dict[str, np.ndarray]:
+    """Kelvin–Helmholtz shear layer: the classic mixing-instability test.
+
+    A density-matched 3-D setup (equal-mass particles on one lattice, so no
+    spurious surface tension from a density jump): the central slab
+    |z − box/2| < box/4 streams at +v_shear in x, the outer gas at
+    −v_shear, with a smooth tanh transition of width ``layer_width`` and a
+    sinusoidal v_z seed perturbation localised at the two interfaces
+    (Price 2008-style). Pressure is uniform (same u everywhere), so the
+    only dynamics is the shear instability rolling up the interfaces —
+    a scenario whose *activity structure* (interfaces deepen their time
+    bins first) exercises the time-bin machinery differently from a
+    point blast.
+    """
+    ic = uniform_ic(n_side, box=box, temperature=u0, jitter=jitter,
+                    seed=seed, n_target=n_target)
+    pos = ic["pos"]
+    z = pos[:, 2] / box
+    x = pos[:, 0] / box
+    # smooth shear profile: +v in the central slab, -v outside
+    d_lo = (z - 0.25) / max(layer_width, 1e-6)
+    d_hi = (z - 0.75) / max(layer_width, 1e-6)
+    profile = 0.5 * (np.tanh(d_lo) - np.tanh(d_hi)) * 2.0 - 1.0
+    vx = v_shear * profile
+    # interface-localised v_z seed (both interfaces, opposite phases)
+    vz = perturb * v_shear * np.sin(2.0 * np.pi * modes * x) * (
+        np.exp(-(d_lo ** 2)) + np.exp(-(d_hi ** 2)))
+    vel = np.zeros_like(pos)
+    vel[:, 0] = vx
+    vel[:, 2] = vz
+    ic["vel"] = vel.astype(np.float32)
+    return ic
+
+
 def clustered_ic(n: int, *, box: float = 1.0, n_halos: int = 32,
                  clustered_fraction: float = 0.8, seed: int = 0,
                  temperature: float = 1.0,

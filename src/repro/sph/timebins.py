@@ -246,29 +246,42 @@ def _drift(state: TimeBinState, dt_min, *, box: float) -> TimeBinState:
                           time=state.time + dt_min)
 
 
-def _force_substep(state: TimeBinState, pairs: PairList, pair_mask, level,
-                   wake_floor, dt_max, depth, u_floor, *, cfg: SPHConfig
-                   ) -> Tuple[TimeBinState, jax.Array]:
-    """Bin-boundary update at an interior sub-step.
+def _substep_density_phase(state: TimeBinState, pairs: PairList, pair_mask,
+                           active, *, cfg: SPHConfig):
+    """Density half of a bin-boundary update (the paper's first comm phase).
 
-    Two particle sets end a step here: bins ≥ level (their regular
-    boundary) and particles *woken* by the neighbour limiter — their cell's
-    ``wake_floor`` (deepest neighbourhood bin − delta) now exceeds their
-    bin, meaning a shock has arrived and coasting to the end of their long
-    step would be unstable. Both are closed with a kick of
-    (t − t_start) − dt_bin/2, which equals the regular half-kick for
-    aligned particles and un-kicks the woken ones back to the current
-    time. The closing particles may then *deepen* (their own new CFL /
-    heating step, or the wake floor), and immediately open the next step
-    with a first half-kick. Shallower bins wait for the cycle end.
+    Computes fresh rho/omega for the ``active`` particles (stored values are
+    kept elsewhere) and derives press/cs for *every* particle — inactive
+    neighbours expose their stored rho through the equation of state. The
+    distributed engine inserts the rho/press halo exchange between this
+    phase and :func:`_substep_force_phase`; the single-host engine composes
+    them back-to-back inside one jitted program.
     """
     cells = state.cells
     mask = cells.mask
-    at_boundary = state.bins >= level
-    woken = state.bins < wake_floor[:, None]
-    active = ((at_boundary | woken) & (mask > 0)).astype(cells.pos.dtype)
-    dv, du, rho, omega = _active_accelerations(
-        cells, pairs, pair_mask, active, state.rho, state.omega, cfg)
+    rho_new, drho_dh, nngb = _density_pass(cells, pairs, cfg,
+                                           pair_mask=pair_mask)
+    rho_new = jnp.where(mask > 0, rho_new, 1.0)
+    drho_dh = jnp.where(mask > 0, drho_dh, 0.0)
+    rho = jnp.where(active > 0, rho_new, state.rho)
+    press, omega_new, cs = ghost_update(rho, drho_dh, cells.u, cells.h,
+                                        gamma=cfg.gamma)
+    omega = jnp.where(active > 0, omega_new, state.omega)
+    press = jnp.where(mask > 0, press, 0.0)
+    return rho, omega, press, cs
+
+
+def _substep_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
+                         active, rho, omega, press, cs, wake_floor, dt_max,
+                         depth, u_floor, *, cfg: SPHConfig
+                         ) -> Tuple[TimeBinState, jax.Array]:
+    """Force + kick half of a bin-boundary update (second comm phase)."""
+    cells = state.cells
+    mask = cells.mask
+    dv, du = _force_pass(cells, pairs, rho, press, omega, cs, cfg,
+                         pair_mask=pair_mask)
+    mask3 = mask[..., None]
+    dv, du = dv * mask3, du * mask
     accel = jnp.where(active[..., None] > 0, dv, state.accel)
     dudt = jnp.where(active > 0, du, state.dudt)
     # close the ending step: v is at t_start + dt_bin/2, bring it to `t`
@@ -290,19 +303,69 @@ def _force_substep(state: TimeBinState, pairs: PairList, pair_mask, level,
                           omega=omega, bins=bins, t_start=t_start), nact
 
 
-def _force_final(state: TimeBinState, pairs: PairList, pair_mask, dt_max,
-                 *, cfg: SPHConfig) -> TimeBinState:
-    """Cycle-closing boundary: every bin ends; no step is opened."""
+def substep_active_mask(state: TimeBinState, level, wake_floor) -> jax.Array:
+    """Particles ending a step now: regular bin boundary (bins ≥ level) or
+    woken by the neighbour limiter (their cell's wake_floor — deepest
+    neighbourhood bin − delta — now exceeds their bin: a shock has arrived
+    and coasting to the end of their long step would be unstable)."""
+    at_boundary = state.bins >= level
+    woken = state.bins < wake_floor[:, None]
+    return ((at_boundary | woken)
+            & (state.cells.mask > 0)).astype(state.cells.pos.dtype)
+
+
+def _force_substep(state: TimeBinState, pairs: PairList, pair_mask, level,
+                   wake_floor, dt_max, depth, u_floor, *, cfg: SPHConfig
+                   ) -> Tuple[TimeBinState, jax.Array]:
+    """Bin-boundary update at an interior sub-step.
+
+    Two particle sets end a step here: bins ≥ level (their regular
+    boundary) and particles *woken* by the neighbour limiter (see
+    :func:`substep_active_mask`). Both are closed with a kick of
+    (t − t_start) − dt_bin/2, which equals the regular half-kick for
+    aligned particles and un-kicks the woken ones back to the current
+    time. The closing particles may then *deepen* (their own new CFL /
+    heating step, or the wake floor), and immediately open the next step
+    with a first half-kick. Shallower bins wait for the cycle end.
+
+    Composition of the density and force phases; the distributed time-bin
+    engine runs the same two phases with an activity-aware halo exchange
+    in between (``sph/dist_timebins.py``).
+    """
+    active = substep_active_mask(state, level, wake_floor)
+    rho, omega, press, cs = _substep_density_phase(
+        state, pairs, pair_mask, active, cfg=cfg)
+    return _substep_force_phase(state, pairs, pair_mask, active, rho, omega,
+                                press, cs, wake_floor, dt_max, depth,
+                                u_floor, cfg=cfg)
+
+
+def _final_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
+                       rho, omega, press, cs, dt_max, *, cfg: SPHConfig
+                       ) -> TimeBinState:
+    """Force + closing kick of the cycle-ending boundary."""
     cells = state.cells
     active = cells.mask
-    dv, du, rho, omega = _active_accelerations(
-        cells, pairs, pair_mask, active, state.rho, state.omega, cfg)
+    dv, du = _force_pass(cells, pairs, rho, press, omega, cs, cfg,
+                         pair_mask=pair_mask)
+    mask3 = cells.mask[..., None]
+    dv, du = dv * mask3, du * cells.mask
     elapsed = state.time - state.t_start
     close = elapsed - 0.5 * bin_timestep(dt_max, state.bins)
     cells = _kick(cells, dv, du, active, close)
     return state._replace(cells=cells, accel=dv, dudt=du, rho=rho,
                           omega=omega,
                           t_start=jnp.full_like(state.t_start, state.time))
+
+
+def _force_final(state: TimeBinState, pairs: PairList, pair_mask, dt_max,
+                 *, cfg: SPHConfig) -> TimeBinState:
+    """Cycle-closing boundary: every bin ends; no step is opened."""
+    active = state.cells.mask
+    rho, omega, press, cs = _substep_density_phase(
+        state, pairs, pair_mask, active, cfg=cfg)
+    return _final_force_phase(state, pairs, pair_mask, rho, omega, press,
+                              cs, dt_max, cfg=cfg)
 
 
 # ------------------------------------------------------------------- driver
@@ -326,6 +389,13 @@ class TimeBinSimulation:
                  depth_headroom: int = 2,
                  capacity_margin: float = 3.0,
                  rebin_each_cycle: bool = True):
+        if type(self) is TimeBinSimulation:
+            import warnings
+            warnings.warn(
+                "constructing repro.sph.TimeBinSimulation directly is "
+                "deprecated; use repro.sph.build_simulation("
+                "SimulationSpec(...)) (integrator='timebin', "
+                "backend='local')", DeprecationWarning, stacklevel=2)
         self.box = float(box)
         self.cfg = cfg
         self.n = len(pos)
