@@ -1,0 +1,120 @@
+"""Host vs collective transport wall-time per force sub-step (Sedov).
+
+The distributed time-bin engine runs the same physics over either wire
+(``transport="host" | "collective"``, bit-for-bit identical states); this
+microbenchmark measures what the wire costs: wall time per cycle and per
+force sub-step for each transport, plus the collective side's compiled
+exchange-program count (the bucket discipline keeps it flat as cycles
+accumulate).
+
+The measurement runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the collective
+path has a 4-device mesh regardless of how the parent process configured
+jax. Results land in ``benchmarks/results/halo_transport.json``.
+
+Run:  PYTHONPATH=src python benchmarks/halo_transport.py [n_side] [ncycles]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+try:                                    # runnable as module or script
+    from .common import emit
+except ImportError:                     # pragma: no cover
+    from common import emit
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(nranks)d"
+import sys, time, json
+sys.path.insert(0, %(src)r)
+import numpy as np
+import jax
+jax.config.update("jax_default_matmul_precision", "float32")
+from repro.sph import SimulationSpec, SPHConfig, build_simulation
+
+base = SimulationSpec(
+    scenario="sedov",
+    scenario_params={"n_side": %(n_side)d, "e0": 1.0, "seed": 0,
+                     "n_target": 16.0, "r_inject": 0.5 / %(n_side)d},
+    physics=SPHConfig(alpha_visc=1.0, cfl=0.15, n_target=16.0),
+    integrator="timebin", backend="distributed", ranks=%(nranks)d,
+    max_depth=6)
+
+out = {}
+states = {}
+for transport in ("host", "collective"):
+    sim = build_simulation(base.with_(transport=transport))
+    sim.step()                                   # warm-up: compiles
+    walls, subs = [], 0
+    for _ in range(%(ncycles)d):
+        t0 = time.perf_counter()
+        stats = sim.step()
+        walls.append(time.perf_counter() - t0)
+        subs += stats["force_substeps"]
+    eng = sim.engine
+    out[transport] = {
+        "wall_per_cycle_s": float(np.mean(walls)),
+        "wall_per_force_substep_us": 1e6 * float(np.sum(walls)) / subs,
+        "force_substeps": subs,
+        "exported_slots": int(eng.halo_exported_slots),
+        "transport": eng.transport_stats(),
+    }
+    states[transport] = (np.asarray(eng.state.cells.pos),
+                        np.asarray(eng.state.cells.u))
+for a, b in zip(states["host"], states["collective"]):
+    np.testing.assert_array_equal(a, b)
+out["identical_physics"] = True
+print("RESULT_JSON=" + json.dumps(out, default=str))
+"""
+
+
+def run(n_side=8, ncycles=3, nranks=4) -> list:
+    script = _WORKER % {"nranks": nranks, "n_side": n_side,
+                        "ncycles": ncycles,
+                        "src": os.path.join(ROOT, "src")}
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"halo_transport worker failed:\n{proc.stderr[-3000:]}")
+    payload = next(line for line in proc.stdout.splitlines()
+                   if line.startswith("RESULT_JSON="))
+    res = json.loads(payload[len("RESULT_JSON="):])
+
+    rows = []
+    for transport in ("host", "collective"):
+        r = res[transport]
+        extra = ""
+        if transport == "collective":
+            t = r["transport"]
+            extra = (f";mode={t['mode']};rounds={t['rounds']};"
+                     f"programs={t['programs']}")
+        rows.append({
+            "name": f"transport/{transport}/us_per_force_substep",
+            "us_per_call": round(r["wall_per_force_substep_us"], 1),
+            "derived": f"wall_per_cycle_s={r['wall_per_cycle_s']:.4f};"
+                       f"force_substeps={r['force_substeps']};"
+                       f"exported_slots={r['exported_slots']}"
+                       f"{extra}"})
+    ratio = (res["collective"]["wall_per_force_substep_us"]
+             / max(res["host"]["wall_per_force_substep_us"], 1e-9))
+    rows.append({
+        "name": "transport/collective_over_host_ratio",
+        "us_per_call": round(ratio, 3),
+        "derived": f"identical_physics={res['identical_physics']};"
+                   f"nranks={nranks};n_side={n_side};ncycles={ncycles}"})
+    emit(rows, "halo_transport")
+    return rows
+
+
+if __name__ == "__main__":
+    n_side = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+    ncycles = int(sys.argv[2]) if len(sys.argv) > 2 else 3
+    run(n_side=n_side, ncycles=ncycles)

@@ -8,8 +8,9 @@ import traceback
 
 
 def main() -> None:
-    from . import (baseline_compare, comm_stats, intranode_scaling,
-                   kernels_bench, partition_quality, strong_scaling)
+    from . import (baseline_compare, comm_stats, halo_transport,
+                   intranode_scaling, kernels_bench, partition_quality,
+                   strong_scaling)
 
     print("name,us_per_call,derived")
     modules = [
@@ -19,6 +20,7 @@ def main() -> None:
         ("partition_quality (Fig 4)", partition_quality.run),
         ("baseline_compare (§5 GADGET-2)", baseline_compare.run),
         ("kernels_bench", kernels_bench.run),
+        ("halo_transport (host vs collective wire)", halo_transport.run),
     ]
     failures = []
     for label, fn in modules:

@@ -15,7 +15,8 @@ from .cost_model import (CostModel, LayerCost, attention_cost,
                          moe_cost, model_flops_2nd, model_flops_6nd,
                          timebin_frequency)
 from .comm_planner import (CommStats, HaloPlan, insert_comm_tasks,
-                           pairwise_stats_from_partition, plan_halo_1d)
+                           pairwise_stats_from_partition, plan_halo_1d,
+                           ppermute_rounds)
 from .decompose import (Decomposition, assign_tasks, bin_occupancy_imbalance,
                         decompose_cells, decompose_layers,
                         decompose_with_comm, rank_bin_occupancy,
@@ -31,7 +32,7 @@ __all__ = [
     "mamba_cost", "mlp_cost", "moe_cost", "model_flops_2nd",
     "model_flops_6nd", "timebin_frequency",
     "CommStats", "HaloPlan", "insert_comm_tasks",
-    "pairwise_stats_from_partition", "plan_halo_1d",
+    "pairwise_stats_from_partition", "plan_halo_1d", "ppermute_rounds",
     "Decomposition", "assign_tasks", "bin_occupancy_imbalance",
     "decompose_cells", "decompose_layers", "decompose_with_comm",
     "rank_bin_occupancy", "timebin_node_weights",

@@ -162,6 +162,48 @@ def plan_halo_1d(*, axis: str, radius: int = 1) -> HaloPlan:
     return HaloPlan(axis=axis, offsets=tuple(offs))
 
 
+def ppermute_rounds(edges, nranks: Optional[int] = None
+                    ) -> List[List[Tuple[int, int]]]:
+    """Decompose directed rank edges into ``lax.ppermute`` rounds.
+
+    SWIFT's send/recv tasks are point-to-point; the TPU-lowerable image is a
+    sequence of *partial permutations* — in each round every rank sends to at
+    most one rank and receives from at most one (``ppermute``'s contract).
+    Greedy edge colouring over the export edge list: each round grabs a
+    maximal set of edges with distinct sources and distinct destinations, so
+    all edges are covered in at most 2·Δ − 1 rounds (Δ = max in/out degree).
+    For the graph-partitioned cut the degree is the number of neighbouring
+    ranks, independent of the total rank count — the neighbour-to-neighbour
+    schedule the paper's asynchronous exchange relies on.
+
+    ``edges``: iterable of (src, dst) rank pairs, src ≠ dst. Deduplicated and
+    sorted for determinism. Returns a list of rounds, each a list of
+    (src, dst) forming a partial permutation.
+    """
+    remaining = sorted({(int(s), int(d)) for s, d in edges})
+    for s, d in remaining:
+        if s == d:
+            raise ValueError(f"self-edge ({s}, {d}) in export edge list")
+        if nranks is not None and not (0 <= s < nranks and 0 <= d < nranks):
+            raise ValueError(f"edge ({s}, {d}) outside rank range {nranks}")
+    rounds: List[List[Tuple[int, int]]] = []
+    while remaining:
+        used_src: Set[int] = set()
+        used_dst: Set[int] = set()
+        rnd: List[Tuple[int, int]] = []
+        rest: List[Tuple[int, int]] = []
+        for (s, d) in remaining:
+            if s in used_src or d in used_dst:
+                rest.append((s, d))
+            else:
+                rnd.append((s, d))
+                used_src.add(s)
+                used_dst.add(d)
+        rounds.append(rnd)
+        remaining = rest
+    return rounds
+
+
 def pairwise_stats_from_partition(
         cell_edges: Dict[Tuple[int, int], float],
         assignment: np.ndarray,

@@ -22,15 +22,16 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .mesh_utils import axis_size, ring_perm
+
 
 def swa_halo_exchange(kv_local, *, axis: str, window: int):
     """kv_local (B, S_shard, …): returns the previous shard's trailing
     ``window`` positions (zeros for shard 0)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     tail = kv_local[:, -window:]
-    perm = [(i, (i + 1) % n) for i in range(n)]
-    halo = jax.lax.ppermute(tail, axis, perm)    # from shard idx-1
+    halo = jax.lax.ppermute(tail, axis, ring_perm(n))   # from shard idx-1
     halo = jnp.where(idx == 0, jnp.zeros_like(halo), halo)
     return halo
 

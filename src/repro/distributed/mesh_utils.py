@@ -6,9 +6,55 @@ import math
 from typing import Iterable, List, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 AxisPref = Sequence[Union[str, Tuple[str, ...]]]
+
+
+def ranks_mesh(nranks: int, *, axis: str = "ranks") -> Mesh:
+    """1-D mesh over the first ``nranks`` devices (the transport mesh).
+
+    Raises with the emulation hint when the process has too few devices —
+    on CPU the collective transports are exercised with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devices = jax.devices()
+    if nranks > len(devices):
+        raise ValueError(
+            f"collective transport needs {nranks} addressable devices, "
+            f"have {len(devices)}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={nranks} before "
+            f"importing jax, or use transport='host'")
+    return Mesh(np.array(devices[:nranks]), (axis,))
+
+
+def ring_perm(n: int, offset: int = 1) -> List[Tuple[int, int]]:
+    """The ring permutation (i → i + offset mod n) for ``lax.ppermute``."""
+    return [(i, (i + offset) % n) for i in range(n)]
+
+
+def axis_size(axis: str):
+    """Named-axis size from inside shard_map/pmap, across jax versions:
+    ``jax.lax.axis_size`` arrived after 0.4; older jax constant-folds a
+    ``psum`` of a literal to the axis size."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis)
+    return jax.lax.psum(1, axis_name=axis)
+
+
+def mesh_with_auto_axes(devices, axes: Sequence[str]) -> Mesh:
+    """``Mesh(devices, axes)`` with explicit Auto axis types where the jax
+    version has them (``jax.sharding.AxisType`` arrived after 0.4; older
+    jax has no ``axis_types`` keyword and defaults to the same
+    behaviour)."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:                 # pragma: no cover
+        return Mesh(devices, tuple(axes))
+    return Mesh(devices, tuple(axes),
+                axis_types=(AxisType.Auto,) * len(tuple(axes)))
 
 
 def valid_spec(shape: Sequence[int], prefs: Sequence[AxisPref],

@@ -28,9 +28,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-
-def _ring_perm(n: int, shift: int = 1):
-    return [(i, (i + shift) % n) for i in range(n)]
+from .mesh_utils import axis_size, ring_perm
 
 
 def allgather_matmul_local(x_local, w_local, *, axis: str):
@@ -41,12 +39,12 @@ def allgather_matmul_local(x_local, w_local, *, axis: str):
     plain allgather-then-matmul gives; here each round contributes the rows
     owned by a different shard, written into its slice of the output.
     """
-    n_dev = jax.lax.axis_size(axis)
+    n_dev = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m = x_local.shape[0]
     out = jnp.zeros((m * n_dev, w_local.shape[1]), x_local.dtype)
     chunk = x_local
-    perm = _ring_perm(n_dev)
+    perm = ring_perm(n_dev)
     for r in range(n_dev):
         # after r forward hops of the i→i+1 ring, we hold idx−r's rows
         src = (idx - r) % n_dev
@@ -65,12 +63,12 @@ def matmul_reducescatter_local(x_local, w_local, *, axis: str):
     adds it to the accumulator riding the ring — the classic reduce-scatter
     matmul fusion.
     """
-    n_dev = jax.lax.axis_size(axis)
+    n_dev = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     m = x_local.shape[0]
     assert m % n_dev == 0, "row dim must divide the axis"
     ms = m // n_dev
-    perm = _ring_perm(n_dev)
+    perm = ring_perm(n_dev)
     acc = None
     for r in range(n_dev - 1, -1, -1):
         dst = (idx + r) % n_dev

@@ -11,7 +11,9 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from ..distributed.mesh_utils import mesh_with_auto_axes
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -26,8 +28,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"before importing jax (dryrun.py does this)")
     import numpy as np
     dev_array = np.asarray(devices[:n]).reshape(shape)
-    return Mesh(dev_array, axes,
-                axis_types=(AxisType.Auto,) * len(shape))
+    return mesh_with_auto_axes(dev_array, axes)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
@@ -35,4 +36,4 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
     n = math.prod(shape)
     import numpy as np
     dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
-    return Mesh(dev_array, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return mesh_with_auto_axes(dev_array, axes)

@@ -26,6 +26,8 @@ from .timebins import (TimeBinSimulation, TimeBinState, active_level,
                        cell_max_bins, timebin_init)
 from .dist_timebins import (DistTimeBinSimulation, build_rank_plan,
                             halo_export_schedule)
+from .collectives import (CollectiveTransport, build_allgather_program,
+                          build_permute_program)
 
 __all__ = [
     "SCENARIOS", "SimulationSpec", "SimulationProtocol", "build_simulation",
@@ -41,4 +43,6 @@ __all__ = [
     "TimeBinSimulation", "TimeBinState", "active_level", "assign_bins",
     "bin_timestep", "cell_bin_histogram", "cell_max_bins", "timebin_init",
     "DistTimeBinSimulation", "build_rank_plan", "halo_export_schedule",
+    "CollectiveTransport", "build_allgather_program",
+    "build_permute_program",
 ]

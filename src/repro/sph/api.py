@@ -26,7 +26,8 @@ integrator      backend       engine
 ``"global"``    ``"distributed"``  ``distributed.DistSimulation``
                                (shard_map halos: allgather / ring)
 ``"timebin"``   ``"distributed"``  ``dist_timebins.DistTimeBinSimulation``
-                               (activity-aware halos over a rank partition)
+                               (activity-aware halos over a rank partition;
+                               wire via ``transport="host" | "collective"``)
 ==============  ============  ===============================================
 
 The legacy constructors keep working as thin shims (they *are* the engine
@@ -156,6 +157,12 @@ class SimulationSpec:
     activity_aware_halos: bool = True      # time-bin × distributed
     repartition_threshold: float = 1.5
     seed: int = 0
+    # time-bin × distributed wire: "host" (numpy row copies) or
+    # "collective" (shard_map + ppermute/all_gather over bucketed buffers;
+    # needs `ranks` addressable devices). transport_mode picks the
+    # collective lowering: "auto" | "ppermute" | "allgather".
+    transport: str = "host"
+    transport_mode: str = "auto"
 
     # shared
     capacity_margin: float = 3.0
@@ -175,6 +182,13 @@ class SimulationSpec:
         if self.halo not in ("allgather", "ring"):
             raise ValueError(f"halo must be 'allgather' or 'ring', "
                              f"got {self.halo!r}")
+        if self.transport not in ("host", "collective"):
+            raise ValueError(f"transport must be 'host' or 'collective', "
+                             f"got {self.transport!r}")
+        if self.transport_mode not in ("auto", "ppermute", "allgather"):
+            raise ValueError(
+                f"transport_mode must be 'auto', 'ppermute' or "
+                f"'allgather', got {self.transport_mode!r}")
 
     def with_(self, **changes) -> "SimulationSpec":
         """A copy with the given fields replaced (specs are frozen)."""
@@ -370,7 +384,8 @@ class _DistTimeBin(_SimulationBase):
             repartition_threshold=spec.repartition_threshold,
             seed=spec.seed, dt_max=spec.dt_max, max_depth=spec.max_depth,
             bin_delta=spec.bin_delta, depth_headroom=spec.depth_headroom,
-            capacity_margin=spec.capacity_margin)
+            capacity_margin=spec.capacity_margin,
+            transport=spec.transport, transport_mode=spec.transport_mode)
 
     @property
     def state(self):

@@ -1,0 +1,208 @@
+"""Device-collective transport: shard_map/ppermute halo exchange programs.
+
+The wire lowering of the distributed time-bin engine's two per-sub-step
+exchanges (``sph/dist_timebins.py``). Where :class:`~repro.distributed.
+transport.HostTransport` copies rows through numpy, this module compiles the
+same copies into one XLA program over a rank mesh:
+
+* every rank packs the rows it owes its neighbours into a
+  **power-of-two-bucketed export buffer** (mask-padded, so the program's
+  shapes — and therefore its compilation — are independent of how many
+  cut-cell rows are active at this sub-step);
+* the buffers move either through ``lax.ppermute`` rounds — the
+  neighbour-to-neighbour schedule derived from the comm planner's export
+  edge list (``core.comm_planner.ppermute_rounds``) — or through one
+  ``lax.all_gather`` (the fallback when the edge colouring needs more
+  rounds than a gather is worth);
+* each rank scatters the received slots into its halo replica rows;
+  invalid (padding) slots are routed to a scratch row that is sliced off, so
+  padded slots provably leave the state untouched.
+
+Exchanges are pure row copies — the collective transport is bit-for-bit
+identical to the host transport by construction, which the parity tests in
+``tests/test_transport.py`` assert on 1 and 4 (emulated) devices.
+
+Compiled programs are cached by their static signature (bucket, rounds,
+field shapes) in a :class:`~repro.distributed.transport.ProgramCache`, and
+every build is registered with the engine's :class:`~repro.distributed.
+transport.CompileProbe` — the bucket hysteresis guarantees the cache stays
+small across sub-steps and cycles.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.comm_planner import ppermute_rounds
+from ..distributed.mesh_utils import ranks_mesh
+from ..distributed.transport import (BucketPolicy, CompileProbe, ProgramCache,
+                                     ShipSlots, Transport, pack_allgather,
+                                     pack_rounds)
+
+
+def build_permute_program(mesh, axis: str,
+                          rounds: Sequence[Sequence[Tuple[int, int]]],
+                          nrows: int, bucket: int, nfields: int):
+    """Compile one ppermute-rounds exchange over ``nfields`` stacked fields.
+
+    Inputs (global shapes): ``pack``/``unpack`` (nranks, R, bucket) int32,
+    ``valid`` (nranks, R, bucket) float, then each field
+    (nranks, nrows, …). Returns the fields with every valid received slot
+    written into its destination row; everything else bit-identical.
+    """
+    perms = [list(rnd) for rnd in rounds]
+
+    def body(pack, unpack, valid, *fields):
+        outs = []
+        for f in fields:
+            loc = f[0]                                   # (nrows, …)
+            scratch = jnp.zeros((1,) + loc.shape[1:], loc.dtype)
+            loc = jnp.concatenate([loc, scratch], axis=0)
+            for t in range(len(perms)):
+                buf = loc[pack[0, t]]                    # (bucket, …)
+                got = jax.lax.ppermute(buf, axis, perms[t])
+                keep = valid[0, t] > 0
+                # padding slots land on the scratch row (sliced off below)
+                safe = jnp.where(keep, unpack[0, t], nrows)
+                loc = loc.at[safe].set(got)
+            outs.append(loc[:nrows][None])
+        return tuple(outs)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis),) * (3 + nfields),
+                   out_specs=(P(axis),) * nfields)
+    return jax.jit(fn)
+
+
+def build_allgather_program(mesh, axis: str, nrows: int, bucket_out: int,
+                            bucket_in: int, nfields: int):
+    """Compile the all-gather fallback exchange.
+
+    Inputs: ``pack`` (nranks, bucket_out) int32, ``unpack_src``/
+    ``unpack_rows`` (nranks, bucket_in) int32, ``valid`` (nranks,
+    bucket_in) float, then the stacked fields.
+    """
+
+    def body(pack, unpack_src, unpack_rows, valid, *fields):
+        outs = []
+        for f in fields:
+            loc = f[0]
+            scratch = jnp.zeros((1,) + loc.shape[1:], loc.dtype)
+            loc = jnp.concatenate([loc, scratch], axis=0)
+            buf = loc[pack[0]]                           # (bucket_out, …)
+            g = jax.lax.all_gather(buf, axis)            # (nranks, Bo, …)
+            flat = g.reshape((-1,) + g.shape[2:])
+            got = flat[unpack_src[0]]                    # (bucket_in, …)
+            keep = valid[0] > 0
+            safe = jnp.where(keep, unpack_rows[0], nrows)
+            loc = loc.at[safe].set(got)
+            outs.append(loc[:nrows][None])
+        return tuple(outs)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis),) * (4 + nfields),
+                   out_specs=(P(axis),) * nfields)
+    return jax.jit(fn)
+
+
+class CollectiveTransport(Transport):
+    """shard_map/ppermute lowering of the halo exchange.
+
+    Holds the rank mesh, the round schedule of the current decomposition,
+    the bucket policy and the compiled-program cache. ``prepare(edges)`` is
+    called whenever the decomposition (and hence the export edge list)
+    changes; ``exchange`` runs one compiled collective step.
+    """
+
+    kind = "collective"
+
+    def __init__(self, *, nranks: int, probe: Optional[CompileProbe] = None,
+                 mode: str = "auto", axis: str = "ranks",
+                 min_bucket: int = 8, shrink_patience: int = 4):
+        if mode not in ("auto", "ppermute", "allgather"):
+            raise ValueError(f"mode must be auto|ppermute|allgather, "
+                             f"got {mode!r}")
+        self.nranks = int(nranks)
+        self.axis = axis
+        self.mesh = ranks_mesh(self.nranks, axis=axis)
+        self.mode_requested = mode
+        self.buckets = BucketPolicy(min_bucket=min_bucket,
+                                    shrink_patience=shrink_patience)
+        self.programs = ProgramCache(probe)
+        self.rounds: List[List[Tuple[int, int]]] = []
+        self._perms_sig: Tuple = ()
+        self._edges: Optional[Tuple[Tuple[int, int], ...]] = None
+        self.exchanges = 0
+        self.shipped_rows = 0
+
+    # ------------------------------------------------------------- planning
+    def prepare(self, edges: Sequence[Tuple[int, int]]) -> None:
+        edges_t = tuple(sorted({(int(s), int(d)) for s, d in edges}))
+        if edges_t == self._edges:
+            return
+        self._edges = edges_t
+        self.rounds = ppermute_rounds(edges_t, self.nranks)
+        self._perms_sig = tuple(tuple(rnd) for rnd in self.rounds)
+
+    @property
+    def mode(self) -> str:
+        if self.mode_requested != "auto":
+            return self.mode_requested
+        # neighbour-to-neighbour rounds beat a gather while the edge
+        # colouring stays within the ring bound; degenerate cuts (more
+        # rounds than ranks) fall back to one all_gather
+        return "ppermute" if len(self.rounds) < self.nranks else "allgather"
+
+    # ------------------------------------------------------------- exchange
+    def exchange(self, slots: ShipSlots, fields: List[List],
+                 stream: str = "substep") -> List[List]:
+        if self._edges is None:
+            raise RuntimeError("CollectiveTransport.exchange before "
+                               "prepare(edges)")
+        nranks = self.nranks
+        nrows = int(np.shape(fields[0][0])[0])
+        meta = tuple((tuple(np.shape(f[0])[1:]),
+                      np.dtype(jnp.asarray(f[0]).dtype).name)
+                     for f in fields)
+        stacked = [jnp.stack([jnp.asarray(fr) for fr in f]) for f in fields]
+        if self.mode == "ppermute":
+            B = self.buckets.fit(("edge", stream), slots.max_edge_slots)
+            pack, unpack, valid = pack_rounds(self.rounds, slots, nranks, B)
+            key = ("ppermute", nranks, nrows, B, self._perms_sig, meta)
+            prog = self.programs.get(key, lambda: build_permute_program(
+                self.mesh, self.axis, self.rounds, nrows, B, len(fields)))
+            outs = prog(jnp.asarray(pack), jnp.asarray(unpack),
+                        jnp.asarray(valid), *stacked)
+        else:
+            Bo = self.buckets.fit(("ag_out", stream),
+                                  slots.max_rank_exports(nranks))
+            Bi = self.buckets.fit(("ag_in", stream),
+                                  slots.max_rank_imports(nranks))
+            pack, usrc, urows, valid = pack_allgather(slots, nranks, Bo, Bi)
+            key = ("allgather", nranks, nrows, Bo, Bi, meta)
+            prog = self.programs.get(key, lambda: build_allgather_program(
+                self.mesh, self.axis, nrows, Bo, Bi, len(fields)))
+            outs = prog(jnp.asarray(pack), jnp.asarray(usrc),
+                        jnp.asarray(urows), jnp.asarray(valid), *stacked)
+        self.exchanges += 1
+        self.shipped_rows += slots.total
+        # normalise placement: slicing a mesh-sharded output yields arrays
+        # committed to individual devices, which would make every
+        # downstream phase program recompile per device. Round-tripping
+        # through host memory (what the host transport does anyway) keeps
+        # the phase programs' compile count identical across transports.
+        outs_h = [np.asarray(out) for out in outs]
+        return [[jnp.asarray(o[r]) for r in range(nranks)] for o in outs_h]
+
+    def stats(self) -> Dict[str, object]:
+        return {"kind": self.kind, "mode": self.mode,
+                "rounds": len(self.rounds), "exchanges": self.exchanges,
+                "shipped_rows": self.shipped_rows,
+                "programs": self.programs.builds,
+                "bucket_events": list(self.buckets.events)}

@@ -30,14 +30,22 @@ Cut pair tasks are duplicated on both ranks (the paper's Fig. 2 green
 tasks): every rank's pair list covers all pairs touching its owned cells,
 so owned active particles always receive complete interaction sums.
 
-Transport is host-mediated (numpy buffer copies between the ranks' jitted
-phase programs): the rank-partitioned state, the export/import plan, the
-per-sub-step buffer compaction and the message accounting are the real
-protocol; the wire lowering (``lax.ppermute`` rounds / ``all_gather``) is
-the same machinery ``sph/distributed.py`` already uses for the global-dt
-engine and is independent of everything implemented here. With ``nranks=1``
-the engine reduces to the single-host ladder bit-for-bit (asserted in
-``tests/test_api.py``).
+The wire is a pluggable **transport** (``transport="host" | "collective"``):
+``HostTransport`` copies rows through numpy between the ranks' jitted phase
+programs, while ``CollectiveTransport`` (``sph/collectives.py``) compiles
+the same copies into one shard_map program — ``lax.ppermute`` rounds over
+the comm planner's export edge schedule (``core.comm_planner.
+ppermute_rounds``) with an ``all_gather`` fallback — over power-of-two-
+bucketed export buffers, so the exchange program is compiled once and
+reused for every sub-step regardless of how many cut-cell rows are active.
+Both transports are pure row copies and therefore bit-for-bit identical
+(asserted in ``tests/test_transport.py``). The density/force sub-step
+programs are shared across ranks: every rank's pair subset is padded to one
+common power-of-two bucket, so one compiled program per (phase, bucket)
+serves the whole mesh; the :class:`~repro.distributed.transport.
+CompileProbe` (``self.probe``) counts the real XLA compiles. With
+``nranks=1`` the engine reduces to the single-host ladder bit-for-bit
+(asserted in ``tests/test_api.py``).
 
 Repartitioning uses per-rank **bin occupancy**: the decomposition is
 retriggered when the time-averaged active work per rank
@@ -58,6 +66,8 @@ import jax.numpy as jnp
 
 from ..core import CostModel, decompose_cells
 from ..core.decompose import timebin_node_weights
+from ..distributed.transport import (CompileProbe, ShipSlots, TRANSPORTS,
+                                     make_transport, next_pow2)
 from .cellgrid import PairList, ParticleCells
 from .engine import SPHConfig, build_taskgraph
 from .timebins import (TimeBinSimulation, TimeBinState, _final_force_phase,
@@ -102,6 +112,22 @@ class RankPlan:
         """Total (cell, importer) slots across the cut = full-boundary
         export volume of one exchange."""
         return sum(len(imps) for _, _, imps in self.cut.values())
+
+    def export_edges(self) -> List[Tuple[int, int]]:
+        """Directed rank-to-rank edges of the cut (the comm planner's
+        export edge list — input to ``ppermute_rounds``)."""
+        edges = {(o, ir) for _, (o, _, imps) in self.cut.items()
+                 for (ir, _) in imps}
+        return sorted(edges)
+
+    def ship_slots(self, cells_due: List[int]) -> ShipSlots:
+        """This sub-step's exchange: owner row → importer rows per edge."""
+        slots = ShipSlots()
+        for c in cells_due:
+            o, orow, imps = self.cut[c]
+            for (ir, irow) in imps:
+                slots.add(o, ir, orow, irow)
+        return slots
 
 
 def build_rank_plan(assignment: np.ndarray, ci: np.ndarray, cj: np.ndarray,
@@ -207,21 +233,39 @@ class DistTimeBinSimulation(TimeBinSimulation):
                  repartition_threshold: float = 1.5,
                  cost_model: Optional[CostModel] = None,
                  seed: int = 0,
+                 transport: str = "host",
+                 transport_mode: str = "auto",
                  **kw):
+        if transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of {TRANSPORTS}, "
+                             f"got {transport!r}")
         self.nranks = int(nranks)
         self.activity_aware = bool(activity_aware)
         self.repartition_threshold = float(repartition_threshold)
         self._cost_model = cost_model or CostModel(rates={})
         self._seed = seed
+        self.transport_kind = transport
         super().__init__(pos, vel, mass, u, h, box=box, cfg=cfg, **kw)
-        self._jit_sub_density = jax.jit(functools.partial(
-            self._sub_density, cfg=cfg))
-        self._jit_sub_force = jax.jit(functools.partial(
-            _substep_force_phase, cfg=cfg))
-        self._jit_final_density = jax.jit(functools.partial(
-            self._final_density, cfg=cfg))
-        self._jit_final_force = jax.jit(functools.partial(
-            _final_force_phase, cfg=cfg))
+        # the compile-count probe: every jitted program of this engine is
+        # registered, so tests can assert the bucket discipline bounds
+        # recompiles (one per (program, bucket), none per sub-step)
+        self.probe = CompileProbe()
+        self.probe.register("drift", self._jit_drift)
+        self.probe.register("cycle_start", self._jit_start)
+        self._jit_sub_density = self.probe.register("density", jax.jit(
+            functools.partial(self._sub_density, cfg=cfg)))
+        self._jit_sub_force = self.probe.register("force", jax.jit(
+            functools.partial(_substep_force_phase, cfg=cfg)))
+        self._jit_final_density = self.probe.register("final_density",
+            jax.jit(functools.partial(self._final_density, cfg=cfg)))
+        self._jit_final_force = self.probe.register("final_force", jax.jit(
+            functools.partial(_final_force_phase, cfg=cfg)))
+        self.program_keys: set = set()      # (program, level, bucket) seen
+        self._transport = make_transport(transport, nranks=self.nranks,
+                                         probe=self.probe,
+                                         mode=transport_mode)
+        self._plan_cache: Optional[RankPlan] = None
+        self._plan_cache_key: Optional[bytes] = None
         self._assignment = self._initial_assignment()
         self.repartitions = 0
         self.halo_exported_slots = 0
@@ -346,29 +390,51 @@ class DistTimeBinSimulation(TimeBinSimulation):
             time=states[0].time,
             **{k: jnp.asarray(v) for k, v in out.items()})
 
+    # ------------------------------------------------------------ rank plan
+    def _get_plan(self) -> RankPlan:
+        """The cycle's rank plan; cached per assignment (the pair list is
+        static, so the plan only changes when the partition does)."""
+        key = self._assignment.tobytes()
+        if self._plan_cache is None or self._plan_cache_key != key:
+            self._plan_cache = build_rank_plan(
+                np.asarray(self._assignment), self._ci, self._cj,
+                nranks=self.nranks)
+            self._plan_cache_key = key
+            self._transport.prepare(self._plan_cache.export_edges())
+        return self._plan_cache
+
     # --------------------------------------------------------- pair subsets
-    def _rank_pair_subset(self, plan: RankPlan, r: int,
-                          active_cells: Optional[np.ndarray]
-                          ) -> Tuple[PairList, jax.Array, int]:
-        """Rank r's pairs (touching its owned cells), restricted to pairs
-        touching an active cell, padded to a power-of-two length — the
-        rank-local image of ``TimeBinSimulation._pair_subset``."""
-        sel = plan.touch[r]
-        if active_cells is not None:
-            sel = sel & (active_cells[self._ci] | active_cells[self._cj])
-        idx = np.nonzero(sel)[0]
-        nlive = len(idx)
-        npad = 1
-        while npad < max(nlive, 1):
-            npad *= 2
-        pad = np.zeros(npad - nlive, dtype=idx.dtype)
-        idxp = np.concatenate([idx, pad])
-        pmask = np.zeros(npad, np.float32)
-        pmask[:nlive] = 1.0
-        sub = PairList(ci=jnp.asarray(plan.ci_ext[r][idxp]),
-                       cj=jnp.asarray(plan.cj_ext[r][idxp]),
-                       shift=jnp.asarray(self._shift[idxp]))
-        return sub, jnp.asarray(pmask), nlive
+    def _rank_pair_subsets(self, plan: RankPlan,
+                           active_cells: Optional[np.ndarray]
+                           ) -> Tuple[List[Tuple[PairList, jax.Array, int]],
+                                      int]:
+        """All ranks' pair subsets, padded to one **shared** power-of-two
+        bucket (the max across ranks), so a single compiled phase program
+        per (phase, bucket) serves every rank. Padded entries duplicate
+        pair 0 with a zero mask and contribute exact +0.0 to every sum
+        (the mask property test in ``tests/test_transport.py``)."""
+        sels = []
+        nmax = 1
+        for r in range(plan.nranks):
+            sel = plan.touch[r]
+            if active_cells is not None:
+                sel = sel & (active_cells[self._ci] | active_cells[self._cj])
+            sels.append(sel)
+            nmax = max(nmax, int(sel.sum()))
+        npad = next_pow2(nmax)
+        out = []
+        for r in range(plan.nranks):
+            idx = np.nonzero(sels[r])[0]
+            nlive = len(idx)
+            idxp = np.concatenate(
+                [idx, np.zeros(npad - nlive, dtype=idx.dtype)])
+            pmask = np.zeros(npad, np.float32)
+            pmask[:nlive] = 1.0
+            sub = PairList(ci=jnp.asarray(plan.ci_ext[r][idxp]),
+                           cj=jnp.asarray(plan.cj_ext[r][idxp]),
+                           shift=jnp.asarray(self._shift[idxp]))
+            out.append((sub, jnp.asarray(pmask), nlive))
+        return out, npad
 
     # ------------------------------------------------------------ exchanges
     def _exchange_set(self, plan: RankPlan, active_cells: np.ndarray
@@ -378,20 +444,12 @@ class DistTimeBinSimulation(TimeBinSimulation):
             return list(plan.cut.keys())
         return [c for c in plan.cut if active_cells[c]]
 
-    @staticmethod
-    def _copy_rows(plan: RankPlan, cells_due: List[int],
-                   arrays: List[List[np.ndarray]]) -> None:
-        """Owner row → importer rows, for each field array set.
-
-        ``arrays[f][r]`` is rank r's numpy view of field f (ext rows
-        leading). Mutates importer rows in place.
-        """
-        for c in cells_due:
-            o, orow, imps = plan.cut[c]
-            for f in range(len(arrays)):
-                src = arrays[f][o][orow]
-                for (ir, irow) in imps:
-                    arrays[f][ir][irow] = src
+    def transport_stats(self) -> Dict[str, object]:
+        """Wire-level accounting of the active transport + compile probe."""
+        out = dict(self._transport.stats())
+        out["compiles"] = self.probe.counts()
+        out["program_keys"] = len(self.program_keys)
+        return out
 
     # -------------------------------------------------------------- cycling
     def run_cycle(self) -> Dict[str, float]:
@@ -410,8 +468,7 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
         # opening half-kick on the global mirror, then scatter to ranks
         self.state = self._jit_start(self.state, jnp.float32(dt_max_c))
-        plan = build_rank_plan(np.asarray(self._assignment), self._ci,
-                               self._cj, nranks=self.nranks)
+        plan = self._get_plan()
         states = self._scatter_state(plan)
 
         updates = 0
@@ -424,11 +481,19 @@ class DistTimeBinSimulation(TimeBinSimulation):
         bins_h = bins_host.copy()
         wake_floor = self._wake_floor(bins_h, mask_host)
 
+        # per-cycle host caches: the extended wake floors are rebuilt only
+        # when the wake floor itself changes (a wake-up or deepening), not
+        # every sub-step
+        wake_ext_cache: Dict[int, jax.Array] = {}
+
         def wake_ext(r):
-            wf = np.zeros(plan.K + plan.H, np.int32)
-            wf[:len(plan.owned[r])] = wake_floor[plan.owned[r]]
-            wf[plan.K:plan.K + len(plan.halo[r])] = wake_floor[plan.halo[r]]
-            return jnp.asarray(wf)
+            if r not in wake_ext_cache:
+                wf = np.zeros(plan.K + plan.H, np.int32)
+                wf[:len(plan.owned[r])] = wake_floor[plan.owned[r]]
+                wf[plan.K:plan.K + len(plan.halo[r])] = \
+                    wake_floor[plan.halo[r]]
+                wake_ext_cache[r] = jnp.asarray(wf)
+            return wake_ext_cache[r]
 
         for n in range(1, nsub):
             level = active_level(n, depth)
@@ -438,7 +503,8 @@ class DistTimeBinSimulation(TimeBinSimulation):
                 continue
             active_cells = active_p.any(axis=1)
             ship = self._exchange_set(plan, active_cells)
-            nship = sum(len(plan.cut[c][2]) for c in ship)
+            slots = plan.ship_slots(ship) if ship else None
+            nship = slots.total if slots else 0
             cycle_exported += nship
             cycle_full += plan.cut_slots
             self.halo_log.append({
@@ -447,22 +513,23 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
             dt_d = jnp.float32((n - drifted_to) * dt_min)
             drifted_to = n
+            subs, pair_bucket = self._rank_pair_subsets(plan, active_cells)
+            self.program_keys.add(("density", level, pair_bucket))
+            self.program_keys.add(("force", level, pair_bucket))
             phase1 = []
             for r in range(plan.nranks):
                 states[r] = self._jit_drift(states[r], dt_d)
-                sub, pmask, nlive = self._rank_pair_subset(
-                    plan, r, active_cells)
+                sub, pmask, nlive = subs[r]
                 act, rho, om, pr, cs = self._jit_sub_density(
                     states[r], sub, pmask, jnp.int32(level), wake_ext(r))
                 phase1.append([sub, pmask, nlive, act, rho, om, pr, cs])
             # exchange 1: owner's fresh rho/omega/press/cs -> replicas
-            if plan.cut and ship:
-                f_np = [[np.array(phase1[r][4 + f])
-                         for r in range(plan.nranks)] for f in range(4)]
-                self._copy_rows(plan, ship, f_np)
+            if slots:
+                fields = [[phase1[r][4 + f] for r in range(plan.nranks)]
+                          for f in range(4)]
+                fields = self._transport.exchange(slots, fields)
                 for r in range(plan.nranks):
-                    phase1[r][4:] = [jnp.asarray(f_np[f][r])
-                                     for f in range(4)]
+                    phase1[r][4:] = [fields[f][r] for f in range(4)]
             for r in range(plan.nranks):
                 sub, pmask, nlive, act, rho, om, pr, cs = phase1[r]
                 states[r], _ = self._jit_sub_force(
@@ -470,34 +537,38 @@ class DistTimeBinSimulation(TimeBinSimulation):
                     wake_ext(r), jnp.float32(dt_max_c), jnp.int32(depth),
                     jnp.float32(u_floor))
             # exchange 2: kicked state of shipped cells -> replicas
-            if plan.cut and ship:
-                vel = [np.array(states[r].cells.vel)
-                       for r in range(plan.nranks)]
-                uu = [np.array(states[r].cells.u)
-                      for r in range(plan.nranks)]
-                bb = [np.array(states[r].bins)
-                      for r in range(plan.nranks)]
-                ts = [np.array(states[r].t_start)
-                      for r in range(plan.nranks)]
-                ac = [np.array(states[r].accel)
-                      for r in range(plan.nranks)]
-                dd = [np.array(states[r].dudt)
-                      for r in range(plan.nranks)]
-                self._copy_rows(plan, ship, [vel, uu, bb, ts, ac, dd])
+            if slots:
+                fields = [[getattr(states[r].cells, nm)
+                           for r in range(plan.nranks)]
+                          for nm in ("vel", "u")]
+                fields += [[getattr(states[r], nm)
+                            for r in range(plan.nranks)]
+                           for nm in ("bins", "t_start", "accel", "dudt")]
+                vel, uu, bb, ts, ac, dd = self._transport.exchange(
+                    slots, fields)
                 for r in range(plan.nranks):
                     states[r] = states[r]._replace(
                         cells=states[r].cells._replace(
-                            vel=jnp.asarray(vel[r]), u=jnp.asarray(uu[r])),
-                        bins=jnp.asarray(bb[r]),
-                        t_start=jnp.asarray(ts[r]),
-                        accel=jnp.asarray(ac[r]),
-                        dudt=jnp.asarray(dd[r]))
-            # refresh the global bins mirror (deepening) and wake floors
+                            vel=vel[r], u=uu[r]),
+                        bins=bb[r], t_start=ts[r], accel=ac[r], dudt=dd[r])
+            # refresh the global bins mirror (deepening): only ranks whose
+            # owned cells were active can have deepened; everyone else's
+            # mirror rows are untouched — avoids re-materialising every
+            # rank's bins array on every sub-step
+            floor_dirty = False
             for r in range(plan.nranks):
                 own = plan.owned[r]
-                if len(own):
-                    bins_h[own] = np.asarray(states[r].bins)[:len(own)]
-            wake_floor = self._wake_floor(bins_h, mask_host)
+                if not len(own) or not active_cells[own].any():
+                    continue
+                new_bins = np.asarray(states[r].bins)[:len(own)]
+                if not np.array_equal(bins_h[own], new_bins):
+                    bins_h[own] = new_bins
+                    floor_dirty = True
+            if floor_dirty:
+                new_floor = self._wake_floor(bins_h, mask_host)
+                if not np.array_equal(new_floor, wake_floor):
+                    wake_floor = new_floor
+                    wake_ext_cache.clear()     # invalidate on wake-up
             updates += int(active_p.sum())
             pair_tasks += int((active_cells[self._ci]
                                | active_cells[self._cj]).sum())
@@ -505,22 +576,25 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
         # final sync sub-step: everyone active, full pair lists, full cut
         dt_d = jnp.float32((nsub - drifted_to) * dt_min)
+        subs, pair_bucket = self._rank_pair_subsets(plan, None)
+        self.program_keys.add(("final_density", 0, pair_bucket))
+        self.program_keys.add(("final_force", 0, pair_bucket))
         phase1 = []
         for r in range(plan.nranks):
             states[r] = self._jit_drift(states[r], dt_d)
-            sub, pmask, nlive = self._rank_pair_subset(plan, r, None)
+            sub, pmask, nlive = subs[r]
             rho, om, pr, cs = self._jit_final_density(states[r], sub, pmask)
             phase1.append([sub, pmask, nlive, rho, om, pr, cs])
         if plan.cut:
             ship = list(plan.cut.keys())
-            nship = sum(len(plan.cut[c][2]) for c in ship)
-            cycle_exported += nship
+            slots = plan.ship_slots(ship)
+            cycle_exported += slots.total
             cycle_full += plan.cut_slots
-            f_np = [[np.array(phase1[r][3 + f])
-                     for r in range(plan.nranks)] for f in range(4)]
-            self._copy_rows(plan, ship, f_np)
+            fields = [[phase1[r][3 + f] for r in range(plan.nranks)]
+                      for f in range(4)]
+            fields = self._transport.exchange(slots, fields, stream="final")
             for r in range(plan.nranks):
-                phase1[r][3:] = [jnp.asarray(f_np[f][r]) for f in range(4)]
+                phase1[r][3:] = [fields[f][r] for f in range(4)]
         for r in range(plan.nranks):
             sub, pmask, nlive, rho, om, pr, cs = phase1[r]
             states[r] = self._jit_final_force(

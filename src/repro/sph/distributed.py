@@ -223,8 +223,9 @@ def _exchange(fields: Tuple[jax.Array, ...], export_slots, export_valid,
         return tuple(halos)
 
     if halo == "ring":
-        ndev = jax.lax.axis_size(axis)
-        perm = [(i, (i + 1) % ndev) for i in range(ndev)]
+        from ..distributed.mesh_utils import axis_size, ring_perm
+        ndev = axis_size(axis)
+        perm = ring_perm(ndev)
         halos = [jnp.zeros((import_flat.shape[0],) + e.shape[1:], e.dtype)
                  for e in exports]
         windows = list(exports)

@@ -601,8 +601,12 @@ class TimeBinSimulation:
             updates += int(nact)
             pair_tasks += nlive
             force_substeps += 1
-            bins_h = np.asarray(state.bins)
-            wake_floor = self._wake_floor(bins_h, mask_host)
+            # bins only change at force sub-steps (deepening / wake-up):
+            # recompute the wake floors only when they actually did
+            bins_new = np.asarray(state.bins)
+            if not np.array_equal(bins_new, bins_h):
+                bins_h = bins_new
+                wake_floor = self._wake_floor(bins_h, mask_host)
         state = self._jit_drift(state,
                                 jnp.float32((nsub - drifted_to) * dt_min))
         state = self._jit_final(state, self.pairs,

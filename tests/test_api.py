@@ -108,6 +108,45 @@ def test_legacy_constructors_warn_but_work():
             scenario="uniform", scenario_params={"n_side": 4}))
 
 
+def test_legacy_constructors_match_spec_built_states():
+    """Deprecation-shim regression: the legacy constructors keep warning
+    AND still produce states bitwise-equal to the spec-built engines."""
+    from repro.sph import Simulation, TimeBinSimulation, uniform_ic
+    ic = uniform_ic(4, seed=0)
+    args = (ic["pos"], ic["vel"], ic["mass"], ic["u"], ic["h"])
+    params = {"n_side": 4, "seed": 0}
+
+    with pytest.warns(DeprecationWarning):
+        legacy = Simulation(*args, box=ic["box"])
+    built = build_simulation(SimulationSpec(
+        scenario="uniform", scenario_params=params)).engine
+    for name in ("pos", "vel", "mass", "u", "h", "mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(legacy.state.cells, name)),
+            np.asarray(getattr(built.state.cells, name)), err_msg=name)
+    for name in ("accel", "dudt", "rho"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(legacy.state, name)),
+            np.asarray(getattr(built.state, name)), err_msg=name)
+
+    with pytest.warns(DeprecationWarning):
+        legacy_tb = TimeBinSimulation(*args, box=ic["box"], dt_max=0.004)
+    built_tb = build_simulation(SimulationSpec(
+        scenario="uniform", scenario_params=params,
+        integrator="timebin", dt_max=0.004)).engine
+    legacy_tb.run_cycle()
+    built_tb.run_cycle()
+    for name in ("pos", "vel", "u"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(legacy_tb.state.cells, name)),
+            np.asarray(getattr(built_tb.state.cells, name)), err_msg=name)
+    for name in ("accel", "dudt", "rho", "omega", "bins", "t_start"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(legacy_tb.state, name)),
+            np.asarray(getattr(built_tb.state, name)), err_msg=name)
+    assert float(legacy_tb.state.time) == float(built_tb.state.time)
+
+
 # ------------------------------------------- distributed time-bin: host plan
 def _toy_plan(nranks=2):
     # 4 cells in a chain, alternate ownership: every cell is a cut cell

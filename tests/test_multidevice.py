@@ -25,6 +25,15 @@ def run_subprocess(body: str, timeout=900):
         import jax, jax.numpy as jnp
         jax.config.update("jax_default_matmul_precision", "float32")
         assert len(jax.devices()) == 8
+
+        def make_mesh(shape, axes):
+            # jax >= 0.5 wants explicit Auto axis types; 0.4 has no kwarg
+            try:
+                return jax.make_mesh(
+                    shape, axes,
+                    axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+            except (AttributeError, TypeError):
+                return jax.make_mesh(shape, axes)
     """ % os.path.abspath(ROOT)) + textwrap.dedent(body)
     proc = subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True, timeout=timeout)
@@ -38,8 +47,7 @@ def test_overlap_collectives_equivalence():
     run_subprocess("""
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
         from repro.distributed import allgather_matmul, matmul_reducescatter
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
         w = jnp.asarray(rng.standard_normal((32, 48)).astype(np.float32))
@@ -59,8 +67,7 @@ def test_sp_halo_attention_equivalence():
     run_subprocess("""
         from repro.distributed import (full_window_attention_ref,
                                        sp_local_attention)
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         rng = np.random.default_rng(1)
         B, S, H, hd, W = 2, 128, 4, 16, 16
         q = jnp.asarray(rng.standard_normal((B, S, H, hd)).astype(np.float32))
@@ -97,8 +104,7 @@ def test_distributed_sph_matches_host_engine():
         for _ in range(2):
             st = hstep(st, pairs, jnp.float32(0.002), ic["box"], cfg)
         for halo in ("allgather", "ring"):
-            mesh = jax.make_mesh((8,), ("data",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            mesh = make_mesh((8,), ("data",))
             ds = DistSimulation(cells, pairs, spec, mesh, cfg=cfg, halo=halo)
             for _ in range(2):
                 ds.step(0.002)
@@ -136,8 +142,7 @@ def test_sharded_train_step_matches_single_device():
         ref_step = jax.jit(make_train_step(cfg, tcfg))
         p_ref, o_ref, m_ref = ref_step(params, opt, batch)
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         rules = ShardingRules(mesh, cfg, "train")
         psh = rules.params_sharding(params)
         params_s = jax.tree.map(jax.device_put, params, psh)

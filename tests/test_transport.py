@@ -1,0 +1,405 @@
+"""Transport subsystem: bucket hysteresis, ppermute round schedules,
+host/collective exchange parity and the compile-count probe.
+
+In-process tests cover the host wire and the bucket/rounds machinery on the
+single real device. Collective-wire tests need 4 addressable devices: they
+run in-process when the suite is launched with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the second CI job)
+and in an isolated subprocess otherwise.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import ppermute_rounds
+from repro.distributed import (BucketPolicy, HostTransport, ShipSlots,
+                               next_pow2, pack_allgather, pack_rounds)
+from repro.sph import SimulationSpec, SPHConfig, build_simulation
+from repro.sph.cellgrid import PairList
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+requires4 = pytest.mark.skipif(
+    len(jax.devices()) < 4,
+    reason="needs 4 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4)")
+
+
+# ------------------------------------------------------------------- buckets
+def test_next_pow2():
+    assert [next_pow2(n) for n in (0, 1, 2, 3, 4, 5, 63, 64, 65)] == \
+        [1, 1, 2, 4, 4, 8, 64, 64, 128]
+
+
+def test_bucket_policy_grow_immediate_shrink_lazy():
+    pol = BucketPolicy(min_bucket=1, shrink_patience=3)
+    assert pol.fit("k", 5) == 8
+    assert pol.fit("k", 9) == 16          # growth is immediate
+    assert pol.fit("k", 3) == 16          # shrink needs patience
+    assert pol.fit("k", 3) == 16
+    assert pol.fit("k", 3) == 8           # 3rd consecutive low fit: halve
+    assert pol.events == [("k", 8, 16), ("k", 16, 8)]
+
+
+def test_bucket_policy_one_change_per_crossing():
+    """A monotonic ramp recompiles once per power-of-two crossing; demand
+    oscillating around a boundary does not thrash."""
+    pol = BucketPolicy(min_bucket=1, shrink_patience=3)
+    for n in range(1, 200):
+        pol.fit("ramp", n)
+    # 1→256 crosses 2,4,8,…,256: one grow event per crossing
+    assert len(pol.events) == 8
+    assert all(new == 2 * old for (_k, old, new) in pol.events)
+
+    pol2 = BucketPolicy(min_bucket=1, shrink_patience=3)
+    pol2.fit("osc", 65)                   # bucket 128
+    events0 = len(pol2.events)
+    for _ in range(50):
+        pol2.fit("osc", 63)               # next_pow2 = 64 = bucket/2 …
+        pol2.fit("osc", 65)               # … but the high fit resets it
+    assert len(pol2.events) == events0    # no thrash at the boundary
+
+
+def test_bucket_policy_sustained_drop_walks_down():
+    pol = BucketPolicy(min_bucket=2, shrink_patience=2)
+    pol.fit("k", 100)                     # 128
+    for _ in range(12):
+        pol.fit("k", 1)
+    # walks 128→64→32→…→2, one halving per patience window, floored at min
+    assert pol.current("k") == 2
+    sizes = [new for (_k, _old, new) in pol.events]
+    assert sizes == [64, 32, 16, 8, 4, 2]
+
+
+# -------------------------------------------------------------------- rounds
+@pytest.mark.parametrize("seed", range(5))
+def test_ppermute_rounds_partial_permutations(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))
+    edges = {(int(s), int(d)) for s, d in
+             rng.integers(0, n, size=(3 * n, 2)) if s != d}
+    rounds = ppermute_rounds(edges, n)
+    covered = [e for rnd in rounds for e in rnd]
+    assert sorted(covered) == sorted(edges)          # each edge exactly once
+    for rnd in rounds:
+        srcs = [s for s, _ in rnd]
+        dsts = [d for _, d in rnd]
+        assert len(set(srcs)) == len(srcs)           # partial permutation
+        assert len(set(dsts)) == len(dsts)
+    # greedy bound: ≤ 2Δ − 1 rounds
+    deg = max([sum(1 for s, _ in edges if s == r) for r in range(n)] +
+              [sum(1 for _, d in edges if d == r) for r in range(n)])
+    assert len(rounds) <= max(2 * deg - 1, 1)
+
+
+def test_ppermute_rounds_rejects_self_edges():
+    with pytest.raises(ValueError, match="self-edge"):
+        ppermute_rounds([(1, 1)])
+
+
+def test_ppermute_rounds_all_pairs_is_ring_optimal():
+    n = 4
+    edges = [(s, d) for s in range(n) for d in range(n) if s != d]
+    rounds = ppermute_rounds(edges, n)
+    assert len(rounds) == n - 1                      # Δ = n−1 rounds
+
+
+# ------------------------------------------------------- packing + host wire
+def _random_slots(rng, nranks, nrows):
+    """Random exchange honouring the engine's row invariant: source rows
+    (owned, < nrows/2) and destination rows (halo, ≥ nrows/2) are disjoint
+    on every rank, and each destination row is written at most once."""
+    slots = ShipSlots()
+    half = nrows // 2
+    dst_used = {r: set() for r in range(nranks)}
+    for _ in range(rng.integers(1, 3 * nranks + 1)):
+        s, d = rng.choice(nranks, 2, replace=False)
+        free = [x for x in range(half, nrows) if x not in dst_used[d]]
+        if not free:
+            continue
+        drow = int(rng.choice(free))
+        dst_used[d].add(drow)
+        slots.add(int(s), int(d), int(rng.integers(0, half)), drow)
+    return slots
+
+
+def _host_reference(slots, fields):
+    out = [[np.array(fr) for fr in f] for f in fields]
+    for (s, d), pairs in slots.edges.items():
+        for (srow, drow) in pairs:
+            for f in range(len(out)):
+                out[f][d][drow] = out[f][s][srow]
+    return out
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_pack_rounds_reproduces_host_copy(seed):
+    """The ppermute index tables, replayed in pure numpy exactly as the
+    device program applies them, reproduce the host wire bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    nranks, nrows = 4, 10
+    slots = _random_slots(rng, nranks, nrows)
+    rounds = ppermute_rounds(list(slots.edges), nranks)
+    bucket = next_pow2(slots.max_edge_slots)
+    pack, unpack, valid = pack_rounds(rounds, slots, nranks, bucket)
+
+    fields = [[rng.normal(size=(nrows, 3)).astype(np.float32)
+               for _ in range(nranks)] for _ in range(2)]
+    ref = _host_reference(slots, fields)
+
+    got = [[f.copy() for f in field] for field in fields]
+    for t, rnd in enumerate(rounds):
+        for (s, d) in rnd:
+            for f in range(len(fields)):
+                buf = got[f][s][pack[s, t]]          # sender packs
+                for k in range(bucket):              # receiver unpacks
+                    if valid[d, t, k] > 0:
+                        got[f][d][unpack[d, t, k]] = buf[k]
+    for f in range(len(fields)):
+        for r in range(nranks):
+            np.testing.assert_array_equal(got[f][r], ref[f][r])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_pack_allgather_reproduces_host_copy(seed):
+    rng = np.random.default_rng(seed)
+    nranks, nrows = 4, 10
+    slots = _random_slots(rng, nranks, nrows)
+    Bo = next_pow2(slots.max_rank_exports(nranks))
+    Bi = next_pow2(slots.max_rank_imports(nranks))
+    pack, usrc, urows, valid = pack_allgather(slots, nranks, Bo, Bi)
+
+    fields = [[rng.normal(size=(nrows,)).astype(np.float32)
+               for _ in range(nranks)]]
+    ref = _host_reference(slots, fields)
+    got = [[f.copy() for f in field] for field in fields]
+    gathered = np.stack([got[0][r][pack[r]] for r in range(nranks)])
+    flat = gathered.reshape(-1)
+    for d in range(nranks):
+        for k in range(Bi):
+            if valid[d, k] > 0:
+                got[0][d][urows[d, k]] = flat[usrc[d, k]]
+    for r in range(nranks):
+        np.testing.assert_array_equal(got[0][r], ref[0][r])
+
+
+def test_host_transport_touches_only_destination_rows():
+    slots = ShipSlots()
+    slots.add(0, 1, src_row=2, dst_row=5)
+    fields = [[jnp.arange(8.0) + 10 * r for r in range(2)]]
+    out = HostTransport().exchange(slots, fields)
+    a0, a1 = np.asarray(out[0][0]), np.asarray(out[0][1])
+    np.testing.assert_array_equal(a0, np.arange(8.0))    # source untouched
+    assert a1[5] == 2.0                                  # copied row
+    keep = [i for i in range(8) if i != 5]
+    np.testing.assert_array_equal(a1[keep], (np.arange(8.0) + 10)[keep])
+
+
+# ------------------------------------------------- mask-padding property
+def _local_timebin_engine(n_side=4):
+    spec = SimulationSpec(scenario="uniform",
+                          scenario_params={"n_side": n_side, "seed": 0},
+                          physics=SPHConfig(alpha_visc=0.8),
+                          integrator="timebin", dt_max=0.004)
+    return build_simulation(spec).engine
+
+
+def test_padded_pairs_contribute_exact_zero():
+    """Satellite acceptance: mask-padded pair entries (the bucket slack)
+    change neither the density nor the force phase by a single bit —
+    the property every bucketed program relies on."""
+    from repro.sph.timebins import (_substep_density_phase,
+                                    _substep_force_phase)
+    eng = _local_timebin_engine()
+    state = eng.state
+    cfg = eng.cfg
+    ci, cj, shift = eng._ci, eng._cj, eng._shift
+    n = len(ci)
+
+    def padded(extra):
+        idxp = np.concatenate([np.arange(n), np.zeros(extra, np.int64)])
+        pmask = np.concatenate([np.ones(n, np.float32),
+                                np.zeros(extra, np.float32)])
+        pairs = PairList(ci=jnp.asarray(ci[idxp]), cj=jnp.asarray(cj[idxp]),
+                         shift=jnp.asarray(shift[idxp]))
+        return pairs, jnp.asarray(pmask)
+
+    active = state.cells.mask
+    wake = jnp.zeros(state.bins.shape[0], jnp.int32)
+    outs = []
+    for extra in (0, 37):
+        pairs, pmask = padded(extra)
+        rho, om, pr, cs = _substep_density_phase(state, pairs, pmask,
+                                                 active, cfg=cfg)
+        new_state, _ = _substep_force_phase(
+            state, pairs, pmask, active, rho, om, pr, cs, wake,
+            jnp.float32(0.004), jnp.int32(0), jnp.float32(0.0), cfg=cfg)
+        outs.append((rho, om, pr, cs, new_state))
+    for a, b in zip(outs[0][:4], outs[1][:4]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sa, sb = outs[0][4], outs[1][4]
+    for name in ("pos", "vel", "u"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sa.cells, name)),
+            np.asarray(getattr(sb.cells, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(sa.accel), np.asarray(sb.accel))
+    np.testing.assert_array_equal(np.asarray(sa.bins), np.asarray(sb.bins))
+
+
+# ------------------------------------------------------ collective transport
+def _dist_spec(transport, n_side=5, ranks=4, max_depth=3, mode="auto"):
+    return SimulationSpec(
+        scenario="sedov",
+        scenario_params={"n_side": n_side, "e0": 1.0, "seed": 0},
+        physics=SPHConfig(alpha_visc=1.0, cfl=0.15),
+        integrator="timebin", backend="distributed", ranks=ranks,
+        dt_max=0.02, max_depth=max_depth, transport=transport,
+        transport_mode=mode)
+
+
+def _assert_engine_states_equal(a, b):
+    for name in ("pos", "vel", "u", "h", "mass", "mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state.cells, name)),
+            np.asarray(getattr(b.state.cells, name)), err_msg=name)
+    for name in ("accel", "dudt", "rho", "omega", "bins", "t_start"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a.state, name)),
+            np.asarray(getattr(b.state, name)), err_msg=name)
+    assert float(a.state.time) == float(b.state.time)
+
+
+def test_spec_transport_validation():
+    with pytest.raises(ValueError, match="transport"):
+        SimulationSpec(transport="pigeon")
+    with pytest.raises(ValueError, match="transport_mode"):
+        SimulationSpec(transport_mode="carrier")
+    from repro.sph.dist_timebins import DistTimeBinSimulation
+    from repro.sph import uniform_ic
+    ic = uniform_ic(3, seed=0)
+    with pytest.raises(ValueError, match="transport"):
+        DistTimeBinSimulation(ic["pos"], ic["vel"], ic["mass"], ic["u"],
+                              ic["h"], box=ic["box"], transport="pigeon")
+
+
+def test_collective_transport_needs_devices():
+    if len(jax.devices()) >= 4:
+        pytest.skip("process has 4 devices; the error path needs fewer")
+    with pytest.raises(ValueError, match="host_platform_device_count"):
+        build_simulation(_dist_spec("collective", ranks=4))
+
+
+@pytest.mark.slow
+def test_collective_one_rank_parity():
+    """ranks=1: no cut, but the whole collective build path (mesh,
+    transport, program cache) runs and matches the host transport."""
+    host = build_simulation(_dist_spec("host", ranks=1))
+    coll = build_simulation(_dist_spec("collective", ranks=1))
+    for _ in range(2):
+        host.step()
+        coll.step()
+    _assert_engine_states_equal(host.engine, coll.engine)
+    assert coll.engine.transport_stats()["kind"] == "collective"
+
+
+@requires4
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["ppermute", "allgather"])
+def test_collective_four_rank_parity(mode):
+    """Acceptance: bit-for-bit parity between transport="host" and
+    transport="collective" on Sedov over ≥2 full cycles on 4 devices."""
+    host = build_simulation(_dist_spec("host", n_side=6, max_depth=4))
+    coll = build_simulation(_dist_spec("collective", n_side=6, max_depth=4,
+                                       mode=mode))
+    for _ in range(2):
+        sh = host.step()
+        sc = coll.step()
+        assert sh["depth"] == sc["depth"]
+        assert sh["halo_exported_slots"] == sc["halo_exported_slots"]
+    _assert_engine_states_equal(host.engine, coll.engine)
+    stats = coll.engine.transport_stats()
+    assert stats["mode"] == mode
+    assert stats["shipped_rows"] > 0
+
+
+@requires4
+@pytest.mark.slow
+def test_compile_probe_one_compile_per_level_bucket():
+    """Acceptance: at most one recompile per (level, bucket) pair — the
+    probe reads the true jit cache sizes; buckets bound them."""
+    import collections
+    coll = build_simulation(_dist_spec("collective", n_side=6, max_depth=4))
+    for _ in range(2):
+        coll.step()
+    eng = coll.engine
+    builds_after_two = eng._transport.programs.builds
+    compiles_after_two = eng.probe.total_compiles()
+    buckets = collections.defaultdict(set)
+    for (prog, level, bucket) in eng.program_keys:
+        buckets[prog].add(bucket)
+    counts = eng.probe.counts()
+    for prog in ("density", "force", "final_density", "final_force"):
+        assert 1 <= counts[prog] <= len(buckets[prog if prog in buckets
+                                                else "density"])
+    for name, c in counts.items():
+        if name.startswith("program:"):
+            assert c == 1                        # exchange: compile once
+    # a third cycle re-uses everything: no new programs, no new compiles
+    coll.step()
+    assert eng._transport.programs.builds == builds_after_two
+    assert eng.probe.total_compiles() == compiles_after_two
+
+
+@pytest.mark.slow
+def test_collective_parity_subprocess():
+    """The 4-device parity check for suites running on one real device
+    (the default tier-1 lane): spawned with an emulated device mesh."""
+    if len(jax.devices()) >= 4:
+        pytest.skip("in-process 4-device tests cover this lane")
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys
+        sys.path.insert(0, os.path.join(%r, "src"))
+        import numpy as np
+        import jax
+        jax.config.update("jax_default_matmul_precision", "float32")
+        assert len(jax.devices()) == 4
+        from repro.sph import SimulationSpec, SPHConfig, build_simulation
+        base = SimulationSpec(
+            scenario="sedov",
+            scenario_params={"n_side": 5, "e0": 1.0, "seed": 0},
+            physics=SPHConfig(alpha_visc=1.0, cfl=0.15),
+            integrator="timebin", backend="distributed", ranks=4,
+            dt_max=0.02, max_depth=3)
+        host = build_simulation(base)
+        coll = build_simulation(base.with_(transport="collective"))
+        for _ in range(2):
+            host.step()
+            coll.step()
+        for name in ("pos", "vel", "u", "h"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(host.engine.state.cells, name)),
+                np.asarray(getattr(coll.engine.state.cells, name)),
+                err_msg=name)
+        np.testing.assert_array_equal(np.asarray(host.engine.state.bins),
+                                      np.asarray(coll.engine.state.bins))
+        for name, c in coll.engine.probe.counts().items():
+            if name.startswith("program:"):
+                assert c == 1, (name, c)
+        print("SUBPROCESS_PARITY_OK")
+    """ % os.path.abspath(ROOT))
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, \
+        f"subprocess failed:\nSTDOUT:{proc.stdout}\n" \
+        f"STDERR:{proc.stderr[-3000:]}"
+    assert "SUBPROCESS_PARITY_OK" in proc.stdout
