@@ -1,15 +1,31 @@
-"""Host vs collective transport wall-time per force sub-step (Sedov).
+"""Host vs collective vs fused-resident wire cost per force sub-step (Sedov).
 
-The distributed time-bin engine runs the same physics over either wire
-(``transport="host" | "collective"``, bit-for-bit identical states); this
-microbenchmark measures what the wire costs: wall time per cycle and per
-force sub-step for each transport, plus the collective side's compiled
-exchange-program count (the bucket discipline keeps it flat as cycles
-accumulate).
+The distributed time-bin engine runs the same physics over three execution
+paths (bit-for-bit identical states, asserted below):
+
+* ``transport="host"`` — numpy row copies between per-rank phase programs;
+* ``transport="collective"`` — shard_map/ppermute exchange programs, but
+  rank states still round-trip through host between the phase programs;
+* ``transport="collective", residency="device"`` — the fused path: states
+  stay resident on the mesh for the whole cycle and each force sub-step is
+  one compiled program.
+
+For each path the benchmark reports wall time per cycle / per force
+sub-step and the **host-transfer bytes** per force sub-step: for the first
+two, the full-field device→host→device round trips their wires pay
+(``transport.stats()["host_bytes"]``); for the fused path, the transfer
+probe's intra-cycle ledger — control tables and flags only, with
+``state_bytes`` asserted 0.
+
+Every path gets the same fixed warm-up (``max_warm`` cycles — enough for
+the program caches to quiesce at the default size), so all paths are
+measured at the same simulation epoch and the final states can be compared
+bitwise; ``measure_compiles`` reports any compile residue in the measured
+window.
 
 The measurement runs in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the collective
-path has a 4-device mesh regardless of how the parent process configured
+paths have a 4-device mesh regardless of how the parent process configured
 jax. Results land in ``benchmarks/results/halo_transport.json``.
 
 Run:  PYTHONPATH=src python benchmarks/halo_transport.py [n_side] [ncycles]
@@ -47,40 +63,70 @@ base = SimulationSpec(
     integrator="timebin", backend="distributed", ranks=%(nranks)d,
     max_depth=6)
 
+PATHS = {
+    "host": base,
+    "collective": base.with_(transport="collective"),
+    "fused": base.with_(transport="collective", residency="device"),
+}
+
 out = {}
 states = {}
-for transport in ("host", "collective"):
-    sim = build_simulation(base.with_(transport=transport))
-    sim.step()                                   # warm-up: compiles
+for label, spec in PATHS.items():
+    sim = build_simulation(spec)
+    eng = sim.engine
+    # identical fixed warm-up for every path (the physics comparison needs
+    # all paths at the same simulation epoch); long enough that the
+    # program caches quiesce, so the measurement is steady-state reuse —
+    # compiles_during_measurement reports any residue
+    warm = %(max_warm)d
+    for _ in range(warm):
+        sim.step()
+    compiles0 = eng.probe.total_compiles()
+    host_bytes0 = eng._transport.stats().get("host_bytes", 0)
+    intra0 = dict(eng.transfers.intra_bytes)
     walls, subs = [], 0
     for _ in range(%(ncycles)d):
         t0 = time.perf_counter()
         stats = sim.step()
         walls.append(time.perf_counter() - t0)
         subs += stats["force_substeps"]
-    eng = sim.engine
-    out[transport] = {
+    tstats = eng.transport_stats()
+    host_bytes = tstats.get("host_bytes", 0) - host_bytes0
+    intra = {k: v - intra0.get(k, 0)
+             for k, v in eng.transfers.intra_bytes.items()}
+    out[label] = {
         "wall_per_cycle_s": float(np.mean(walls)),
         "wall_per_force_substep_us": 1e6 * float(np.sum(walls)) / subs,
         "force_substeps": subs,
+        "warmup_cycles": warm,
+        "compiles_during_measurement":
+            eng.probe.total_compiles() - compiles0,
         "exported_slots": int(eng.halo_exported_slots),
-        "transport": eng.transport_stats(),
+        "host_bytes_per_force_substep": host_bytes / subs,
+        "intra_cycle_bytes_per_force_substep":
+            sum(intra.values()) / subs,
+        "intra_cycle_state_bytes": eng.transfers.stats()[
+            "intra_state_bytes"],
+        "transport": tstats,
     }
-    states[transport] = (np.asarray(eng.state.cells.pos),
-                        np.asarray(eng.state.cells.u))
-for a, b in zip(states["host"], states["collective"]):
-    np.testing.assert_array_equal(a, b)
+    states[label] = (np.asarray(eng.state.cells.pos),
+                     np.asarray(eng.state.cells.u))
+ref = states["host"]
+for label in ("collective", "fused"):
+    for a, b in zip(ref, states[label]):
+        np.testing.assert_array_equal(a, b)
+assert out["fused"]["intra_cycle_state_bytes"] == 0
 out["identical_physics"] = True
 print("RESULT_JSON=" + json.dumps(out, default=str))
 """
 
 
-def run(n_side=8, ncycles=3, nranks=4) -> list:
+def run(n_side=8, ncycles=3, nranks=4, max_warm=8) -> list:
     script = _WORKER % {"nranks": nranks, "n_side": n_side,
-                        "ncycles": ncycles,
+                        "ncycles": ncycles, "max_warm": max_warm,
                         "src": os.path.join(ROOT, "src")}
     proc = subprocess.run([sys.executable, "-c", script],
-                          capture_output=True, text=True, timeout=1800)
+                          capture_output=True, text=True, timeout=3600)
     if proc.returncode != 0:
         raise RuntimeError(
             f"halo_transport worker failed:\n{proc.stderr[-3000:]}")
@@ -89,27 +135,41 @@ def run(n_side=8, ncycles=3, nranks=4) -> list:
     res = json.loads(payload[len("RESULT_JSON="):])
 
     rows = []
-    for transport in ("host", "collective"):
-        r = res[transport]
+    for label in ("host", "collective", "fused"):
+        r = res[label]
+        t = r["transport"]
         extra = ""
-        if transport == "collective":
-            t = r["transport"]
+        if label != "host":
             extra = (f";mode={t['mode']};rounds={t['rounds']};"
                      f"programs={t['programs']}")
+        if label == "fused":
+            extra += (f";intra_state_bytes={r['intra_cycle_state_bytes']};"
+                      f"bins_refreshes={t['bins_refreshes']}")
         rows.append({
-            "name": f"transport/{transport}/us_per_force_substep",
+            "name": f"transport/{label}/us_per_force_substep",
             "us_per_call": round(r["wall_per_force_substep_us"], 1),
             "derived": f"wall_per_cycle_s={r['wall_per_cycle_s']:.4f};"
                        f"force_substeps={r['force_substeps']};"
-                       f"exported_slots={r['exported_slots']}"
+                       f"measure_compiles="
+                       f"{r['compiles_during_measurement']};"
+                       f"exported_slots={r['exported_slots']};"
+                       f"host_B_per_substep="
+                       f"{r['host_bytes_per_force_substep']:.0f};"
+                       f"intra_B_per_substep="
+                       f"{r['intra_cycle_bytes_per_force_substep']:.0f}"
                        f"{extra}"})
-    ratio = (res["collective"]["wall_per_force_substep_us"]
-             / max(res["host"]["wall_per_force_substep_us"], 1e-9))
-    rows.append({
-        "name": "transport/collective_over_host_ratio",
-        "us_per_call": round(ratio, 3),
-        "derived": f"identical_physics={res['identical_physics']};"
-                   f"nranks={nranks};n_side={n_side};ncycles={ncycles}"})
+    for num, den, name in (("collective", "host",
+                            "collective_over_host_ratio"),
+                           ("fused", "collective",
+                            "fused_over_collective_ratio")):
+        ratio = (res[num]["wall_per_force_substep_us"]
+                 / max(res[den]["wall_per_force_substep_us"], 1e-9))
+        rows.append({
+            "name": f"transport/{name}",
+            "us_per_call": round(ratio, 3),
+            "derived": f"identical_physics={res['identical_physics']};"
+                       f"nranks={nranks};n_side={n_side};"
+                       f"ncycles={ncycles}"})
     emit(rows, "halo_transport")
     return rows
 

@@ -4,7 +4,8 @@ from .mesh_utils import axis_size, batch_pref, data_axes, \
     mesh_with_auto_axes, named, ranks_mesh, ring_perm, valid_spec
 from .sharding_rules import ShardingRules
 from .transport import (BucketPolicy, CompileProbe, HostTransport,
-                        ProgramCache, ShipSlots, Transport, make_transport,
+                        ProgramCache, ResidentBuffers, ShipSlots,
+                        TransferProbe, Transport, make_transport,
                         next_pow2, pack_allgather, pack_rounds)
 from .overlap import (allgather_matmul, allgather_matmul_local,
                       matmul_reducescatter, matmul_reducescatter_local)
@@ -18,8 +19,8 @@ __all__ = [
     "axis_size", "batch_pref", "data_axes", "mesh_with_auto_axes",
     "named", "ranks_mesh", "ring_perm", "valid_spec", "ShardingRules",
     "BucketPolicy", "CompileProbe", "HostTransport", "ProgramCache",
-    "ShipSlots", "Transport", "make_transport", "next_pow2",
-    "pack_allgather", "pack_rounds",
+    "ResidentBuffers", "ShipSlots", "TransferProbe", "Transport",
+    "make_transport", "next_pow2", "pack_allgather", "pack_rounds",
     "allgather_matmul", "allgather_matmul_local", "matmul_reducescatter",
     "matmul_reducescatter_local", "full_window_attention_ref",
     "sp_local_attention", "swa_halo_exchange", "assign_stages",

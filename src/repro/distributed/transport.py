@@ -24,6 +24,13 @@ the compiler. This module provides the generic machinery for that:
 * :class:`HostTransport` — the host-mediated wire (numpy row copies between
   the ranks' jitted phase programs); the reference semantics every
   device-collective lowering must reproduce bit-for-bit.
+* :class:`TransferProbe` / :class:`ResidentBuffers` — the residency layer:
+  per-field accounting of every byte the engine moves across the
+  host↔device boundary (split into cycle-*boundary* traffic — scatter and
+  gather — and *intra-cycle* traffic), and the named stacked device buffers
+  the fused device-resident engine keeps on the mesh between exchanges.
+  The transfer probe is the ``CompileProbe`` of the wire: tests assert the
+  fused path's intra-cycle traffic carries **zero** dynamical-state bytes.
 * :func:`make_transport` — factory over ``"host" | "collective"`` (the
   collective implementation lives in ``repro.sph.collectives``; imported
   lazily so this layer stays free of SPH specifics).
@@ -38,6 +45,15 @@ import numpy as np
 import jax.numpy as jnp
 
 TRANSPORTS = ("host", "collective")
+RESIDENCIES = ("host", "device")
+
+# the dynamical per-particle state of the time-bin engine: the arrays whose
+# intra-cycle host↔device movement the fused device-resident path eliminates.
+# ``bins`` is deliberately *not* here — it is the schedule (1 int32/particle)
+# and its host mirror is refreshed only on deepening/wake-up events, which
+# the TransferProbe counts separately.
+DYNAMIC_STATE_FIELDS = ("pos", "vel", "mass", "u", "h", "mask", "accel",
+                        "dudt", "rho", "omega", "t_start", "time")
 
 
 def next_pow2(n: int) -> int:
@@ -145,6 +161,86 @@ class ProgramCache:
     @property
     def keys(self):
         return set(self._programs)
+
+
+class TransferProbe:
+    """Host↔device transfer accounting, CompileProbe-style.
+
+    Every byte the engine moves across the host boundary is ``record``-ed
+    under a field name, tagged as cycle-``boundary`` traffic (the scatter at
+    cycle start / gather at cycle end) or intra-cycle traffic. Tests assert
+    the residency discipline on the *measured* ledger instead of trusting
+    the control flow: the fused device-resident path must show zero
+    intra-cycle bytes for every :data:`DYNAMIC_STATE_FIELDS` entry, with
+    only control-plane traffic (index ``tables``, ``flags``, and ``bins``
+    mirror refreshes on wake events) in between.
+    """
+
+    def __init__(self):
+        self.boundary_bytes: Dict[str, int] = {}
+        self.intra_bytes: Dict[str, int] = {}
+        self.intra_events: Dict[str, int] = {}
+
+    def record(self, fname: str, nbytes: int, *, boundary: bool) -> None:
+        book = self.boundary_bytes if boundary else self.intra_bytes
+        book[fname] = book.get(fname, 0) + int(nbytes)
+        if not boundary:
+            self.intra_events[fname] = self.intra_events.get(fname, 0) + 1
+
+    def intra_state_bytes(
+            self, fields: Sequence[str] = DYNAMIC_STATE_FIELDS) -> int:
+        """Intra-cycle bytes of dynamical state — 0 on the resident path."""
+        return sum(self.intra_bytes.get(f, 0) for f in fields)
+
+    def total_bytes(self) -> int:
+        return (sum(self.boundary_bytes.values())
+                + sum(self.intra_bytes.values()))
+
+    def stats(self) -> Dict[str, object]:
+        return {"boundary_bytes": dict(self.boundary_bytes),
+                "intra_bytes": dict(self.intra_bytes),
+                "intra_state_bytes": self.intra_state_bytes(),
+                "total_bytes": self.total_bytes()}
+
+
+class ResidentBuffers:
+    """Named stacked device buffers of the fused device-resident engine.
+
+    Holds one ``(nranks, …)`` mesh-sharded array per state field for the
+    duration of a cycle. The only mutation path is :meth:`update` with the
+    outputs of a compiled program (a device→device handoff, no transfer);
+    host access goes through :meth:`put` / :meth:`pull`, which record their
+    bytes with the :class:`TransferProbe` — so the ledger is complete by
+    construction as long as the engine never touches ``arrays`` directly.
+    """
+
+    def __init__(self, probe: TransferProbe):
+        self.probe = probe
+        self.arrays: Dict[str, object] = {}
+
+    def put(self, name: str, host_array: np.ndarray, place: Callable,
+            *, boundary: bool = True) -> None:
+        """Upload a host array through ``place`` (e.g. a device_put with a
+        mesh sharding) and record the bytes."""
+        self.probe.record(name, host_array.nbytes, boundary=boundary)
+        self.arrays[name] = place(host_array)
+
+    def pull(self, name: str, *, boundary: bool = True,
+             index: Optional[object] = None) -> np.ndarray:
+        """Materialise a buffer (or an indexed slice of it) on host —
+        pull only what the caller consumes; the ledger records the
+        actually-transferred bytes."""
+        arr = self.arrays[name]
+        out = np.asarray(arr if index is None else arr[index])
+        self.probe.record(name, out.nbytes, boundary=boundary)
+        return out
+
+    def update(self, mapping: Dict[str, object]) -> None:
+        """Adopt compiled-program outputs (stays on device: no transfer)."""
+        self.arrays.update(mapping)
+
+    def __getitem__(self, name: str):
+        return self.arrays[name]
 
 
 # ---------------------------------------------------------------- ship slots
@@ -285,20 +381,36 @@ class Transport:
 
 
 class HostTransport(Transport):
-    """Host-mediated wire: numpy row copies between jitted phase programs."""
+    """Host-mediated wire: numpy row copies between jitted phase programs.
+
+    ``host_bytes`` counts what this wire costs beyond the copies
+    themselves: every exchanged field makes a device→host→device round
+    trip of its *full* per-rank arrays (not just the shipped rows) — the
+    overhead the device-resident fused path exists to eliminate.
+    """
 
     kind = "host"
+
+    def __init__(self):
+        self.host_bytes = 0
+        self.exchanges = 0
 
     def exchange(self, slots: ShipSlots, fields: List[List],
                  stream: str = "substep") -> List[List]:
         nranks = max(len(f) for f in fields)
         arrays = [[np.array(fr) for fr in f] for f in fields]
+        self.host_bytes += 2 * sum(a.nbytes for f in arrays for a in f)
+        self.exchanges += 1
         for (s, d), pairs in slots.edges.items():
             for (srow, drow) in pairs:
                 for f in range(len(arrays)):
                     arrays[f][d][drow] = arrays[f][s][srow]
         return [[jnp.asarray(arrays[f][r]) for r in range(nranks)]
                 for f in range(len(arrays))]
+
+    def stats(self) -> Dict[str, object]:
+        return {"kind": self.kind, "exchanges": self.exchanges,
+                "host_bytes": self.host_bytes}
 
 
 def make_transport(kind: str, *, nranks: int,

@@ -27,7 +27,10 @@ integrator      backend       engine
                                (shard_map halos: allgather / ring)
 ``"timebin"``   ``"distributed"``  ``dist_timebins.DistTimeBinSimulation``
                                (activity-aware halos over a rank partition;
-                               wire via ``transport="host" | "collective"``)
+                               wire via ``transport="host" | "collective"``,
+                               state residency via ``residency="host" |
+                               "device"`` — device-resident fused sub-step
+                               programs)
 ==============  ============  ===============================================
 
 The legacy constructors keep working as thin shims (they *are* the engine
@@ -163,6 +166,14 @@ class SimulationSpec:
     # collective lowering: "auto" | "ppermute" | "allgather".
     transport: str = "host"
     transport_mode: str = "auto"
+    # where the per-rank extended states live between exchanges:
+    # "host" — scattered to per-rank arrays each cycle, phase programs and
+    # exchanges dispatched from the host loop (the reference semantics);
+    # "device" — one stacked sharded buffer per field stays on the mesh
+    # for the whole cycle and every force sub-step runs as a single fused
+    # shard_map program (requires transport="collective"). Bit-for-bit
+    # identical trajectories either way (tests/test_conformance.py).
+    residency: str = "host"
 
     # shared
     capacity_margin: float = 3.0
@@ -189,6 +200,14 @@ class SimulationSpec:
             raise ValueError(
                 f"transport_mode must be 'auto', 'ppermute' or "
                 f"'allgather', got {self.transport_mode!r}")
+        if self.residency not in ("host", "device"):
+            raise ValueError(f"residency must be 'host' or 'device', "
+                             f"got {self.residency!r}")
+        if self.residency == "device" and self.transport != "collective":
+            raise ValueError(
+                "residency='device' keeps rank states on the mesh and "
+                "fuses the exchange into the sub-step programs; it "
+                "requires transport='collective'")
 
     def with_(self, **changes) -> "SimulationSpec":
         """A copy with the given fields replaced (specs are frozen)."""
@@ -385,7 +404,8 @@ class _DistTimeBin(_SimulationBase):
             seed=spec.seed, dt_max=spec.dt_max, max_depth=spec.max_depth,
             bin_delta=spec.bin_delta, depth_headroom=spec.depth_headroom,
             capacity_margin=spec.capacity_margin,
-            transport=spec.transport, transport_mode=spec.transport_mode)
+            transport=spec.transport, transport_mode=spec.transport_mode,
+            residency=spec.residency)
 
     @property
     def state(self):

@@ -27,10 +27,24 @@ field shapes) in a :class:`~repro.distributed.transport.ProgramCache`, and
 every build is registered with the engine's :class:`~repro.distributed.
 transport.CompileProbe` — the bucket hysteresis guarantees the cache stays
 small across sub-steps and cycles.
+
+**Fused sub-step programs** (:func:`build_fused_substep_program`): the
+device-resident lowering goes further and compiles a *whole force sub-step*
+— drift, density phase, exchange 1, force phase, kick and exchange 2 — into
+one shard_map program over the stacked per-rank extended states, so the
+state never leaves the mesh between cycle boundaries. The force pair pass
+is split into **interior** pairs (both rows owned — their inputs cannot be
+touched by exchange 1, so their per-pair math is scheduled against the
+exchange rounds instead of behind them) and **cut** pairs (one row is a
+halo replica — they wait for the exchanged densities); the two subsets'
+contributions are re-assembled *in original pair-list order* and applied in
+a single scatter, which keeps the fused program bit-for-bit identical to
+the unsplit host-wire phases (:func:`_split_force_pass`).
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,6 +58,45 @@ from ..distributed.mesh_utils import ranks_mesh
 from ..distributed.transport import (BucketPolicy, CompileProbe, ProgramCache,
                                      ShipSlots, Transport, pack_allgather,
                                      pack_rounds)
+from .cellgrid import PairList, ParticleCells
+from .physics import force_block
+from .timebins import (STATE_AUX_FIELDS, STATE_CELL_FIELDS, TimeBinState,
+                       _apply_final_kick, _apply_force_kick, _drift,
+                       _substep_density_phase, substep_active_mask)
+
+
+# ------------------------------------------------------- in-block row copies
+def _permute_copy(loc, pack, unpack, valid, perms, axis: str, nrows: int):
+    """ppermute-rounds copy of one field inside a shard_map block.
+
+    ``loc`` (nrows, …) is this rank's field; ``pack``/``unpack``/``valid``
+    are its (R, bucket) index tables. Padding slots land on a scratch row
+    that is sliced off, so invalid slots provably never touch the state.
+    """
+    scratch = jnp.zeros((1,) + loc.shape[1:], loc.dtype)
+    loc = jnp.concatenate([loc, scratch], axis=0)
+    for t in range(len(perms)):
+        buf = loc[pack[t]]                               # (bucket, …)
+        got = jax.lax.ppermute(buf, axis, perms[t])
+        keep = valid[t] > 0
+        safe = jnp.where(keep, unpack[t], nrows)
+        loc = loc.at[safe].set(got)
+    return loc[:nrows]
+
+
+def _allgather_copy(loc, pack, unpack_src, unpack_rows, valid, axis: str,
+                    nrows: int):
+    """all-gather fallback copy of one field inside a shard_map block."""
+    scratch = jnp.zeros((1,) + loc.shape[1:], loc.dtype)
+    loc = jnp.concatenate([loc, scratch], axis=0)
+    buf = loc[pack]                                      # (bucket_out, …)
+    g = jax.lax.all_gather(buf, axis)                    # (nranks, Bo, …)
+    flat = g.reshape((-1,) + g.shape[2:])
+    got = flat[unpack_src]                               # (bucket_in, …)
+    keep = valid > 0
+    safe = jnp.where(keep, unpack_rows, nrows)
+    loc = loc.at[safe].set(got)
+    return loc[:nrows]
 
 
 def build_permute_program(mesh, axis: str,
@@ -59,20 +112,10 @@ def build_permute_program(mesh, axis: str,
     perms = [list(rnd) for rnd in rounds]
 
     def body(pack, unpack, valid, *fields):
-        outs = []
-        for f in fields:
-            loc = f[0]                                   # (nrows, …)
-            scratch = jnp.zeros((1,) + loc.shape[1:], loc.dtype)
-            loc = jnp.concatenate([loc, scratch], axis=0)
-            for t in range(len(perms)):
-                buf = loc[pack[0, t]]                    # (bucket, …)
-                got = jax.lax.ppermute(buf, axis, perms[t])
-                keep = valid[0, t] > 0
-                # padding slots land on the scratch row (sliced off below)
-                safe = jnp.where(keep, unpack[0, t], nrows)
-                loc = loc.at[safe].set(got)
-            outs.append(loc[:nrows][None])
-        return tuple(outs)
+        return tuple(
+            _permute_copy(f[0], pack[0], unpack[0], valid[0], perms, axis,
+                          nrows)[None]
+            for f in fields)
 
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(axis),) * (3 + nfields),
@@ -90,25 +133,175 @@ def build_allgather_program(mesh, axis: str, nrows: int, bucket_out: int,
     """
 
     def body(pack, unpack_src, unpack_rows, valid, *fields):
-        outs = []
-        for f in fields:
-            loc = f[0]
-            scratch = jnp.zeros((1,) + loc.shape[1:], loc.dtype)
-            loc = jnp.concatenate([loc, scratch], axis=0)
-            buf = loc[pack[0]]                           # (bucket_out, …)
-            g = jax.lax.all_gather(buf, axis)            # (nranks, Bo, …)
-            flat = g.reshape((-1,) + g.shape[2:])
-            got = flat[unpack_src[0]]                    # (bucket_in, …)
-            keep = valid[0] > 0
-            safe = jnp.where(keep, unpack_rows[0], nrows)
-            loc = loc.at[safe].set(got)
-            outs.append(loc[:nrows][None])
-        return tuple(outs)
+        return tuple(
+            _allgather_copy(f[0], pack[0], unpack_src[0], unpack_rows[0],
+                            valid[0], axis, nrows)[None]
+            for f in fields)
 
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(axis),) * (4 + nfields),
                    out_specs=(P(axis),) * nfields)
     return jax.jit(fn)
+
+
+# ------------------------------------------------- interior/cut force split
+def _split_force_pass(cells: ParticleCells, pairs: PairList, pair_mask,
+                      pre, post, int_pos, int_valid, cut_pos, cut_valid,
+                      *, cfg):
+    """``engine._force_pass`` with the interior/cut work split.
+
+    ``pre``/``post`` are (rho, press, omega, cs) before/after exchange 1.
+    ``int_pos``/``cut_pos`` partition the live pair positions of ``pairs``
+    into interior pairs (both rows owned) and cut pairs (one row a halo
+    replica), each padded to its own bucket with ``*_valid`` zeros.
+
+    Interior pairs read only owned rows, which exchange 1 never writes, so
+    their per-pair contributions are computed from the *pre*-exchange
+    fields — with no data dependency on the wire, XLA is free to schedule
+    them against the exchange rounds. Cut pairs wait for the exchanged
+    densities. Both subsets are then scattered back into **original
+    pair-list position** (padding routed to a scratch slot) and applied in
+    the same two accumulation ops as ``_force_pass``, so every row folds
+    the same contributions in the same order — bit-for-bit identical to
+    the unsplit pass over the ``post`` fields.
+    """
+    B = pairs.ci.shape[0]
+    force = functools.partial(force_block, kernel=cfg.kernel,
+                              alpha_visc=cfg.alpha_visc)
+
+    def subset(fieldset, pos):
+        rho, press, omega, cs = fieldset
+        p = jnp.clip(pos, 0, max(B - 1, 0))
+        ci, cj = pairs.ci[p], pairs.cj[p]
+        shift = pairs.shift[p]
+        gi = lambda a: a[ci]
+        gj = lambda a: a[cj]
+        pos_i = gi(cells.pos)
+        pos_j = gj(cells.pos) + shift[:, None, :]
+        fij = jax.vmap(force)(
+            pos_i, gi(cells.vel), gi(cells.h), gi(press), gi(rho),
+            gi(omega), gi(cs),
+            pos_j, gj(cells.vel), gj(cells.h), gj(press), gj(rho),
+            gj(omega), gj(cs), gj(cells.mass), gj(cells.mask))
+        fji = jax.vmap(force)(
+            pos_j, gj(cells.vel), gj(cells.h), gj(press), gj(rho),
+            gj(omega), gj(cs),
+            pos_i, gi(cells.vel), gi(cells.h), gi(press), gi(rho),
+            gi(omega), gi(cs), gi(cells.mass), gi(cells.mask))
+        return fij, fji
+
+    fij_int, fji_int = subset(pre, int_pos)
+    fij_cut, fji_cut = subset(post, cut_pos)
+
+    safe_int = jnp.where(int_valid > 0, int_pos, B)
+    safe_cut = jnp.where(cut_valid > 0, cut_pos, B)
+
+    def assemble(int_vals, cut_vals):
+        full = jnp.zeros((B + 1,) + int_vals.shape[1:], int_vals.dtype)
+        full = full.at[safe_int].set(int_vals)
+        full = full.at[safe_cut].set(cut_vals)
+        return full[:B]
+
+    dv_ij = assemble(fij_int.dv, fij_cut.dv)
+    du_ij = assemble(fij_int.du, fij_cut.du)
+    dv_ji = assemble(fji_int.dv, fji_cut.dv)
+    du_ji = assemble(fji_int.du, fji_cut.du)
+
+    ncells, cap = cells.mass.shape
+    notself = (pairs.ci != pairs.cj).astype(cells.pos.dtype)
+    live = jnp.ones_like(notself) if pair_mask is None else pair_mask
+    dv = jnp.zeros((ncells, cap, 3), cells.pos.dtype)
+    dv = dv.at[pairs.ci].add(dv_ij * live[:, None, None])
+    dv = dv.at[pairs.cj].add(dv_ji * (notself * live)[:, None, None])
+    du = jnp.zeros((ncells, cap), cells.pos.dtype)
+    du = du.at[pairs.ci].add(du_ij * live[:, None])
+    du = du.at[pairs.cj].add(du_ji * (notself * live)[:, None])
+    return dv, du
+
+
+# --------------------------------------------------- fused sub-step programs
+def build_fused_substep_program(mesh, axis: str, *, mode: str,
+                                rounds: Sequence[Sequence[Tuple[int, int]]],
+                                nrows: int, K: int, cfg, box: float,
+                                final: bool = False):
+    """Compile one whole force sub-step as a single shard_map program.
+
+    The device-resident engine's unit of work: drift → density phase →
+    exchange 1 (rho, omega, press, cs) → split force pass → kick/deepen →
+    exchange 2 (vel, u, bins, t_start, accel, dudt), all over the stacked
+    per-rank extended states, which stay on the mesh. With ``final=True``
+    the program is the cycle-closing boundary instead: every particle
+    active, closing kick only, no exchange 2.
+
+    Inputs are three pytrees — ``state`` (stacked per-rank field dict,
+    sharded over ``axis`` and donated so buffers are reused in place),
+    ``tables`` (pair lists, interior/cut split positions, wake floors and
+    exchange index tables for this sub-step) and ``scalars`` (replicated
+    dt/level/…). Returns the updated state dict plus a per-rank
+    ``changed`` flag: 1 iff any owned row's bin deepened — the only signal
+    the host needs mid-cycle (it triggers a bins-mirror refresh; the
+    dynamical state never leaves the device until the cycle gather).
+    """
+    perms = [list(rnd) for rnd in rounds]
+
+    def xchg(tables, fields):
+        if mode == "ppermute":
+            return [_permute_copy(f, tables["e_pack"], tables["e_unpack"],
+                                  tables["e_valid"], perms, axis, nrows)
+                    for f in fields]
+        return [_allgather_copy(f, tables["e_pack"], tables["e_usrc"],
+                                tables["e_urows"], tables["e_valid"],
+                                axis, nrows) for f in fields]
+
+    def body(state, tables, scalars):
+        blk = {k: v[0] for k, v in state.items()}
+        tbl = {k: v[0] for k, v in tables.items()}
+        st = TimeBinState(
+            cells=ParticleCells(pos=blk["pos"], vel=blk["vel"],
+                                mass=blk["mass"], u=blk["u"], h=blk["h"],
+                                mask=blk["mask"]),
+            accel=blk["accel"], dudt=blk["dudt"], rho=blk["rho"],
+            omega=blk["omega"], bins=blk["bins"], t_start=blk["t_start"],
+            time=blk["time"])
+        st = _drift(st, scalars["dt_drift"], box=box)
+        pairs = PairList(ci=tbl["ci"], cj=tbl["cj"], shift=tbl["shift"])
+        pmask = tbl["pmask"]
+
+        if final:
+            active = st.cells.mask
+        else:
+            active = substep_active_mask(st, scalars["level"], tbl["wake"])
+        rho, om, pr, cs = _substep_density_phase(st, pairs, pmask, active,
+                                                 cfg=cfg)
+        rho2, om2, pr2, cs2 = xchg(tbl, [rho, om, pr, cs])
+        dv, du = _split_force_pass(
+            st.cells, pairs, pmask, (rho, pr, om, cs),
+            (rho2, pr2, om2, cs2), tbl["int_pos"], tbl["int_valid"],
+            tbl["cut_pos"], tbl["cut_valid"], cfg=cfg)
+        if final:
+            st = _apply_final_kick(st, dv, du, rho2, om2,
+                                   scalars["dt_max"], cfg=cfg)
+            changed = jnp.zeros((1,), jnp.int32)
+        else:
+            st, _ = _apply_force_kick(st, active, dv, du, rho2, om2,
+                                      tbl["wake"], scalars["dt_max"],
+                                      scalars["depth"], scalars["u_floor"],
+                                      cfg=cfg)
+            vel, uu, bb, ts, ac, dd = xchg(
+                tbl, [st.cells.vel, st.cells.u, st.bins, st.t_start,
+                      st.accel, st.dudt])
+            changed = jnp.any(bb[:K] != blk["bins"][:K]
+                              ).astype(jnp.int32)[None]
+            st = st._replace(cells=st.cells._replace(vel=vel, u=uu),
+                             bins=bb, t_start=ts, accel=ac, dudt=dd)
+        out = {k: getattr(st.cells, k) for k in STATE_CELL_FIELDS}
+        out.update({k: getattr(st, k) for k in STATE_AUX_FIELDS})
+        out["time"] = st.time
+        return {k: v[None] for k, v in out.items()}, changed
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), P()),
+                   out_specs=(P(axis), P(axis)))
+    return jax.jit(fn, donate_argnums=(0,))
 
 
 class CollectiveTransport(Transport):
@@ -140,6 +333,7 @@ class CollectiveTransport(Transport):
         self._edges: Optional[Tuple[Tuple[int, int], ...]] = None
         self.exchanges = 0
         self.shipped_rows = 0
+        self.host_bytes = 0
 
     # ------------------------------------------------------------- planning
     def prepare(self, edges: Sequence[Tuple[int, int]]) -> None:
@@ -197,12 +391,17 @@ class CollectiveTransport(Transport):
         # downstream phase program recompile per device. Round-tripping
         # through host memory (what the host transport does anyway) keeps
         # the phase programs' compile count identical across transports.
+        # This round trip — device→host→device of every full field — is
+        # exactly the residual overhead the fused device-resident path
+        # (residency="device") removes; host_bytes measures it.
         outs_h = [np.asarray(out) for out in outs]
+        self.host_bytes += 2 * sum(o.nbytes for o in outs_h)
         return [[jnp.asarray(o[r]) for r in range(nranks)] for o in outs_h]
 
     def stats(self) -> Dict[str, object]:
         return {"kind": self.kind, "mode": self.mode,
                 "rounds": len(self.rounds), "exchanges": self.exchanges,
                 "shipped_rows": self.shipped_rows,
+                "host_bytes": self.host_bytes,
                 "programs": self.programs.builds,
                 "bucket_events": list(self.buckets.events)}

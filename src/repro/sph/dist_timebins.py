@@ -64,13 +64,18 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import NamedSharding, PartitionSpec as P
+
 from ..core import CostModel, decompose_cells
 from ..core.decompose import timebin_node_weights
-from ..distributed.transport import (CompileProbe, ShipSlots, TRANSPORTS,
-                                     make_transport, next_pow2)
+from ..distributed.transport import (BucketPolicy, CompileProbe, RESIDENCIES,
+                                     ResidentBuffers, ShipSlots, TRANSPORTS,
+                                     TransferProbe, make_transport, next_pow2,
+                                     pack_allgather, pack_rounds)
 from .cellgrid import PairList, ParticleCells
 from .engine import SPHConfig, build_taskgraph
-from .timebins import (TimeBinSimulation, TimeBinState, _final_force_phase,
+from .timebins import (STATE_AUX_FIELDS, STATE_CELL_FIELDS,
+                       TimeBinSimulation, TimeBinState, _final_force_phase,
                        _substep_density_phase, _substep_force_phase,
                        active_level, cell_bin_histogram, substep_active_mask)
 
@@ -235,10 +240,27 @@ class DistTimeBinSimulation(TimeBinSimulation):
                  seed: int = 0,
                  transport: str = "host",
                  transport_mode: str = "auto",
+                 residency: str = "host",
                  **kw):
         if transport not in TRANSPORTS:
             raise ValueError(f"transport must be one of {TRANSPORTS}, "
                              f"got {transport!r}")
+        if residency not in RESIDENCIES:
+            raise ValueError(f"residency must be one of {RESIDENCIES}, "
+                             f"got {residency!r}")
+        if residency == "device":
+            if transport != "collective":
+                raise ValueError(
+                    "residency='device' fuses the exchange into the "
+                    "sub-step programs and therefore requires "
+                    "transport='collective' (the host wire has no device "
+                    "mesh to keep the state resident on)")
+            if cfg.use_pallas:
+                raise ValueError(
+                    "residency='device' compiles the vmap pair phases "
+                    "into the fused shard_map programs; use_pallas=True "
+                    "is not supported on this path yet")
+        self.residency = residency
         self.nranks = int(nranks)
         self.activity_aware = bool(activity_aware)
         self.repartition_threshold = float(repartition_threshold)
@@ -271,6 +293,18 @@ class DistTimeBinSimulation(TimeBinSimulation):
         self.halo_exported_slots = 0
         self.halo_full_slots = 0
         self.halo_log: List[Dict[str, float]] = []
+        # residency="device": host↔device traffic ledger + mid-cycle bins
+        # mirror refresh counter (one per deepening/wake event, the only
+        # state-array readback the fused path ever performs)
+        self.transfers = TransferProbe()
+        self.bins_refreshes = 0
+        # fused-program buckets never shrink: a whole-sub-step program is
+        # orders of magnitude more expensive to compile than the padded
+        # pair math an oversized bucket wastes, so demand dips must not
+        # mint new shape signatures (growth still recompiles, once per
+        # power-of-two crossing per stream)
+        self._fused_buckets = BucketPolicy(min_bucket=8,
+                                           shrink_patience=10 ** 9)
 
     # ------------------------------------------------------- jitted phases
     @staticmethod
@@ -331,10 +365,8 @@ class DistTimeBinSimulation(TimeBinSimulation):
     def _scatter_state(self, plan: RankPlan) -> List[TimeBinState]:
         """Global mirror → per-rank extended TimeBinStates."""
         st = self.state
-        fills = {"pos": 0.0, "vel": 0.0, "mass": 0.0, "u": 0.0,
-                 "h": _PAD_H, "mask": 0.0, "accel": 0.0, "dudt": 0.0,
-                 "rho": 1.0, "omega": 1.0, "bins": 0, "t_start": 0.0}
-        states = []
+        fills = self._FILLS     # shared with _scatter_resident: the two
+        states = []             # residencies must pad rows identically
         for r in range(plan.nranks):
             idx = np.concatenate([plan.owned[r], plan.halo[r]]).astype(int)
             split = len(plan.owned[r])
@@ -404,6 +436,28 @@ class DistTimeBinSimulation(TimeBinSimulation):
         return self._plan_cache
 
     # --------------------------------------------------------- pair subsets
+    def _select_rank_pairs(self, plan: RankPlan,
+                           active_cells: Optional[np.ndarray]
+                           ) -> Tuple[List[np.ndarray], int]:
+        """Per-rank live pair indices, in global pair order.
+
+        The one selection rule (rank's touch set, optionally restricted to
+        pairs touching an active cell) that both the host phase programs
+        (:meth:`_rank_pair_subsets`) and the fused device tables
+        (:meth:`_fused_tables`) build from — the bitwise-parity contract
+        between the two residencies depends on it never forking.
+        """
+        idxs = []
+        nmax = 1
+        for r in range(plan.nranks):
+            sel = plan.touch[r]
+            if active_cells is not None:
+                sel = sel & (active_cells[self._ci] | active_cells[self._cj])
+            idx = np.nonzero(sel)[0]
+            idxs.append(idx)
+            nmax = max(nmax, len(idx))
+        return idxs, nmax
+
     def _rank_pair_subsets(self, plan: RankPlan,
                            active_cells: Optional[np.ndarray]
                            ) -> Tuple[List[Tuple[PairList, jax.Array, int]],
@@ -413,18 +467,11 @@ class DistTimeBinSimulation(TimeBinSimulation):
         per (phase, bucket) serves every rank. Padded entries duplicate
         pair 0 with a zero mask and contribute exact +0.0 to every sum
         (the mask property test in ``tests/test_transport.py``)."""
-        sels = []
-        nmax = 1
-        for r in range(plan.nranks):
-            sel = plan.touch[r]
-            if active_cells is not None:
-                sel = sel & (active_cells[self._ci] | active_cells[self._cj])
-            sels.append(sel)
-            nmax = max(nmax, int(sel.sum()))
+        idxs, nmax = self._select_rank_pairs(plan, active_cells)
         npad = next_pow2(nmax)
         out = []
         for r in range(plan.nranks):
-            idx = np.nonzero(sels[r])[0]
+            idx = idxs[r]
             nlive = len(idx)
             idxp = np.concatenate(
                 [idx, np.zeros(npad - nlive, dtype=idx.dtype)])
@@ -449,15 +496,26 @@ class DistTimeBinSimulation(TimeBinSimulation):
         out = dict(self._transport.stats())
         out["compiles"] = self.probe.counts()
         out["program_keys"] = len(self.program_keys)
+        out["residency"] = self.residency
+        out["transfers"] = self.transfers.stats()
+        out["bins_refreshes"] = self.bins_refreshes
         return out
 
     # -------------------------------------------------------------- cycling
     def run_cycle(self) -> Dict[str, float]:
         import time as _time
         t0 = _time.perf_counter()
+        ctx = self._cycle_prologue()
+        if self.residency == "device":
+            body = self._cycle_substeps_device(ctx)
+        else:
+            body = self._cycle_substeps_host(ctx)
+        return self._cycle_epilogue(ctx, body, t0)
+
+    def _cycle_prologue(self) -> Dict[str, object]:
+        """Plan the cycle and open it on the global mirror (host side)."""
         dt_max_c, depth = self._plan_cycle()
         nsub = 1 << depth
-        dt_min = dt_max_c / nsub
         nreal = int(np.asarray(self.state.cells.mask).sum())
         bins_host = np.asarray(self.state.bins)
         mask_host = np.asarray(self.state.cells.mask)
@@ -465,10 +523,55 @@ class DistTimeBinSimulation(TimeBinSimulation):
         u_floor = float((m_h * np.asarray(self.state.cells.u)).sum()
                         / max(m_h.sum(), 1e-30))
         hist = np.bincount(bins_host[mask_host > 0], minlength=depth + 1)
-
         # opening half-kick on the global mirror, then scatter to ranks
         self.state = self._jit_start(self.state, jnp.float32(dt_max_c))
         plan = self._get_plan()
+        return {"dt_max_c": dt_max_c, "depth": depth, "nsub": nsub,
+                "dt_min": dt_max_c / nsub, "nreal": nreal,
+                "bins_host": bins_host, "mask_host": mask_host,
+                "u_floor": u_floor, "hist": hist, "plan": plan}
+
+    def _cycle_epilogue(self, ctx: Dict[str, object],
+                        body: Dict[str, int], t0: float) -> Dict[str, float]:
+        """Close the cycle: repartition check, re-bin, counters, stats."""
+        import time as _time
+        nsub, nreal = ctx["nsub"], ctx["nreal"]
+        self._maybe_repartition(np.asarray(self.state.bins),
+                                np.asarray(self.state.cells.mask),
+                                ctx["depth"])
+        if self.rebin_each_cycle:
+            self._rebin_state()
+        self.particle_updates += body["updates"]
+        self.global_equiv_updates += nsub * nreal
+        self.substeps += nsub
+        self.halo_exported_slots += body["cycle_exported"]
+        self.halo_full_slots += body["cycle_full"]
+        return {
+            "t": float(self.state.time),
+            "dt_max": ctx["dt_max_c"],
+            "depth": ctx["depth"],
+            "substeps": nsub,
+            "force_substeps": body["force_substeps"] + 1,
+            "bin_hist": ctx["hist"],
+            "updates": body["updates"],
+            "global_equiv_updates": nsub * nreal,
+            "pair_tasks": body["pair_tasks"],
+            "global_equiv_pair_tasks": nsub * len(self._ci),
+            "halo_exported_slots": body["cycle_exported"],
+            "halo_full_slots": body["cycle_full"],
+            "nranks": ctx["plan"].nranks,
+            "residency": self.residency,
+            "wall": _time.perf_counter() - t0,
+        }
+
+    def _cycle_substeps_host(self, ctx: Dict[str, object]) -> Dict[str, int]:
+        """The host-orchestrated ladder: per-rank phase programs with the
+        transport's exchanges (host or collective wire) in between."""
+        plan: RankPlan = ctx["plan"]
+        depth, nsub = ctx["depth"], ctx["nsub"]
+        dt_max_c, dt_min = ctx["dt_max_c"], ctx["dt_min"]
+        mask_host, u_floor = ctx["mask_host"], ctx["u_floor"]
+        nreal = ctx["nreal"]
         states = self._scatter_state(plan)
 
         updates = 0
@@ -478,7 +581,7 @@ class DistTimeBinSimulation(TimeBinSimulation):
         cycle_exported = 0
         cycle_full = 0
         self.halo_log = []          # latest cycle only (bounded memory)
-        bins_h = bins_host.copy()
+        bins_h = ctx["bins_host"].copy()
         wake_floor = self._wake_floor(bins_h, mask_host)
 
         # per-cycle host caches: the extended wake floors are rebuilt only
@@ -605,28 +708,308 @@ class DistTimeBinSimulation(TimeBinSimulation):
         pair_tasks += len(self._ci)
 
         self._gather_state(plan, states)
-        self._maybe_repartition(np.asarray(self.state.bins),
-                                np.asarray(self.state.cells.mask), depth)
-        if self.rebin_each_cycle:
-            self._rebin_state()
-        self.particle_updates += updates
-        self.global_equiv_updates += nsub * nreal
-        self.substeps += nsub
-        self.halo_exported_slots += cycle_exported
-        self.halo_full_slots += cycle_full
-        return {
-            "t": float(self.state.time),
-            "dt_max": dt_max_c,
-            "depth": depth,
-            "substeps": nsub,
-            "force_substeps": force_substeps + 1,
-            "bin_hist": hist,
-            "updates": updates,
-            "global_equiv_updates": nsub * nreal,
-            "pair_tasks": pair_tasks,
-            "global_equiv_pair_tasks": nsub * len(self._ci),
-            "halo_exported_slots": cycle_exported,
-            "halo_full_slots": cycle_full,
-            "nranks": plan.nranks,
-            "wall": _time.perf_counter() - t0,
-        }
+        return {"updates": updates, "pair_tasks": pair_tasks,
+                "force_substeps": force_substeps,
+                "cycle_exported": cycle_exported,
+                "cycle_full": cycle_full}
+
+    # ------------------------------------------------- device-resident cycle
+    _CELL_FIELDS = STATE_CELL_FIELDS
+    _AUX_FIELDS = STATE_AUX_FIELDS
+    _FILLS = {"pos": 0.0, "vel": 0.0, "mass": 0.0, "u": 0.0, "h": _PAD_H,
+              "mask": 0.0, "accel": 0.0, "dudt": 0.0, "rho": 1.0,
+              "omega": 1.0, "bins": 0, "t_start": 0.0}
+
+    def _mesh_sharding(self) -> NamedSharding:
+        t = self._transport
+        return NamedSharding(t.mesh, P(t.axis))
+
+    def _scatter_resident(self, plan: RankPlan) -> ResidentBuffers:
+        """Global mirror → one stacked (nranks, K+H, …) sharded buffer per
+        field, placed on the transport mesh for the whole cycle."""
+        st = self.state
+        sh = self._mesh_sharding()
+        place = lambda a: jax.device_put(jnp.asarray(a), sh)
+        nrows = plan.K + plan.H
+        res = ResidentBuffers(self.transfers)
+
+        def ext_stacked(a, fill):
+            a = np.asarray(a)
+            out = np.full((plan.nranks, nrows) + a.shape[1:], fill,
+                          dtype=a.dtype)
+            for r in range(plan.nranks):
+                own, hal = plan.owned[r], plan.halo[r]
+                out[r, :len(own)] = a[own]
+                out[r, plan.K:plan.K + len(hal)] = a[hal]
+            return out
+
+        for name in self._CELL_FIELDS:
+            res.put(name, ext_stacked(getattr(st.cells, name),
+                                      self._FILLS[name]), place)
+        for name in self._AUX_FIELDS:
+            res.put(name, ext_stacked(getattr(st, name),
+                                      self._FILLS[name]), place)
+        time_h = np.full((plan.nranks,), float(st.time),
+                         dtype=np.asarray(st.cells.pos).dtype)
+        res.put("time", time_h, place)
+        return res
+
+    def _gather_resident(self, plan: RankPlan, res: ResidentBuffers) -> None:
+        """Stacked owned rows → global mirror (halo replicas discarded)."""
+        st = self.state
+        out = {name: np.asarray(getattr(st, name)).copy()
+               for name in self._AUX_FIELDS}
+        cells_out = {name: np.asarray(getattr(st.cells, name)).copy()
+                     for name in self._CELL_FIELDS}
+        # only owned rows come home — halo replicas are discarded anyway,
+        # so pulling them would pad the boundary ledger for nothing
+        pulled = {name: res.pull(name, index=np.s_[:, :plan.K])
+                  for name in self._CELL_FIELDS + self._AUX_FIELDS}
+        for r in range(plan.nranks):
+            own = plan.owned[r]
+            if not len(own):
+                continue
+            for name in out:
+                out[name][own] = pulled[name][r, :len(own)]
+            for name in cells_out:
+                cells_out[name][own] = pulled[name][r, :len(own)]
+        time_h = res.pull("time")
+        self.state = TimeBinState(
+            cells=ParticleCells(**{k: jnp.asarray(v)
+                                   for k, v in cells_out.items()}),
+            time=jnp.asarray(time_h[0]),
+            **{k: jnp.asarray(v) for k, v in out.items()})
+
+    def _fused_tables(self, plan: RankPlan,
+                      active_cells: Optional[np.ndarray], slots: ShipSlots,
+                      stream: str, wake_stacked: Optional[np.ndarray],
+                      level: int = 0) -> Tuple[Dict[str, jax.Array], Tuple]:
+        """One sub-step's control tables for the fused program + the static
+        shape signature that keys its compilation.
+
+        The pair subset is built exactly as :meth:`_rank_pair_subsets`
+        (shared power-of-two bucket, global pair order) and then split into
+        interior / cut *positions* (a pair is cut iff it touches a halo row
+        ≥ K); the exchange index tables come from the transport's round
+        schedule and bucket policy. Everything here is control plane —
+        int32 indices and masks — the only intra-cycle host→device traffic
+        of the resident path.
+        """
+        t = self._transport
+        nranks = plan.nranks
+        nrows = plan.K + plan.H
+        idxs, nmax = self._select_rank_pairs(plan, active_cells)
+        splits = []
+        imax, cmax = 1, 1
+        for r in range(nranks):
+            idx = idxs[r]
+            halo_pair = ((plan.ci_ext[r][idx] >= plan.K)
+                         | (plan.cj_ext[r][idx] >= plan.K))
+            splits.append(halo_pair)
+            imax = max(imax, int((~halo_pair).sum()))
+            cmax = max(cmax, int(halo_pair.sum()))
+        # pair buckets go through the engine's no-shrink policy, keyed per
+        # (stream, level), so demand wobbling across cycles cannot mint
+        # new fused-program shape signatures
+        B = self._fused_buckets.fit((stream, "pairs", level), nmax)
+        Bi = self._fused_buckets.fit((stream, "int", level), imax)
+        Bc = self._fused_buckets.fit((stream, "cut", level), cmax)
+
+        ci = np.zeros((nranks, B), np.int32)
+        cj = np.zeros((nranks, B), np.int32)
+        shift = np.zeros((nranks, B, 3), self._shift.dtype)
+        pmask = np.zeros((nranks, B), np.float32)
+        int_pos = np.zeros((nranks, Bi), np.int32)
+        int_valid = np.zeros((nranks, Bi), np.float32)
+        cut_pos = np.zeros((nranks, Bc), np.int32)
+        cut_valid = np.zeros((nranks, Bc), np.float32)
+        for r in range(nranks):
+            idx, halo_pair = idxs[r], splits[r]
+            nlive = len(idx)
+            idxp = np.concatenate(
+                [idx, np.zeros(B - nlive, dtype=idx.dtype)])
+            ci[r] = plan.ci_ext[r][idxp]
+            cj[r] = plan.cj_ext[r][idxp]
+            shift[r] = self._shift[idxp]
+            pmask[r, :nlive] = 1.0
+            ipos = np.nonzero(~halo_pair)[0]
+            cpos = np.nonzero(halo_pair)[0]
+            int_pos[r, :len(ipos)] = ipos
+            int_valid[r, :len(ipos)] = 1.0
+            cut_pos[r, :len(cpos)] = cpos
+            cut_valid[r, :len(cpos)] = 1.0
+
+        tables = {"ci": ci, "cj": cj, "shift": shift, "pmask": pmask,
+                  "int_pos": int_pos, "int_valid": int_valid,
+                  "cut_pos": cut_pos, "cut_valid": cut_valid,
+                  "wake": wake_stacked if wake_stacked is not None
+                  else np.zeros((nranks, nrows), np.int32)}
+        if t.mode == "ppermute":
+            Be = self._fused_buckets.fit(("edge", stream),
+                                         slots.max_edge_slots)
+            pack, unpack, valid = pack_rounds(t.rounds, slots, nranks, Be)
+            tables.update(e_pack=pack, e_unpack=unpack, e_valid=valid)
+            exch_sig = ("ppermute", Be, t._perms_sig)
+        else:
+            Bo = self._fused_buckets.fit(("ag_out", stream),
+                                         slots.max_rank_exports(nranks))
+            Bn = self._fused_buckets.fit(("ag_in", stream),
+                                         slots.max_rank_imports(nranks))
+            pack, usrc, urows, valid = pack_allgather(slots, nranks, Bo, Bn)
+            tables.update(e_pack=pack, e_usrc=usrc, e_urows=urows,
+                          e_valid=valid)
+            exch_sig = ("allgather", Bo, Bn)
+        self.transfers.record(
+            "tables", sum(a.nbytes for a in tables.values()), boundary=False)
+        tables = {k: jnp.asarray(v) for k, v in tables.items()}
+        sig = (nranks, nrows, plan.K, B, Bi, Bc, exch_sig)
+        return tables, sig
+
+    def _fused_program(self, sig: Tuple, *, final: bool):
+        """Compiled fused sub-step program for this shape signature (one
+        compile per (phase, bucket signature), cached with the transport's
+        exchange programs so the probe counts every build)."""
+        from .collectives import build_fused_substep_program
+        t = self._transport
+        nrows, K = sig[1], sig[2]
+        key = ("fused_final" if final else "fused_force",) + sig + (t.mode,)
+        return t.programs.get(key, lambda: build_fused_substep_program(
+            t.mesh, t.axis, mode=t.mode, rounds=t.rounds, nrows=nrows, K=K,
+            cfg=self.cfg, box=self.box, final=final))
+
+    def _cycle_substeps_device(self, ctx: Dict[str, object]
+                               ) -> Dict[str, int]:
+        """The device-resident ladder: the stacked extended states stay on
+        the mesh for the whole cycle; every force sub-step is one fused
+        shard_map program (drift → density → exchange → split force →
+        kick → exchange). Host traffic is control tables in, one changed
+        flag out — plus a bins-mirror refresh per deepening/wake event."""
+        plan: RankPlan = ctx["plan"]
+        depth, nsub = ctx["depth"], ctx["nsub"]
+        dt_max_c, dt_min = ctx["dt_max_c"], ctx["dt_min"]
+        mask_host, u_floor = ctx["mask_host"], ctx["u_floor"]
+        nreal = ctx["nreal"]
+        res = self._scatter_resident(plan)
+
+        updates = 0
+        pair_tasks = 0
+        force_substeps = 0
+        drifted_to = 0
+        cycle_exported = 0
+        cycle_full = 0
+        self.halo_log = []
+        bins_h = ctx["bins_host"].copy()
+        wake_floor = self._wake_floor(bins_h, mask_host)
+        wake_stacked: Optional[np.ndarray] = None
+        # cycle-scoped device plan: a sub-step's control tables depend only
+        # on (level, bins mirror) — every sub-step of the same level reuses
+        # the tables already sitting on the device; a deepening/wake event
+        # invalidates the whole cache. A depth-d cycle uploads O(d) table
+        # sets, not O(2**d).
+        table_cache: Dict[int, Tuple] = {}
+
+        def wake_tbl() -> np.ndarray:
+            nonlocal wake_stacked
+            if wake_stacked is None:
+                w = np.zeros((plan.nranks, plan.K + plan.H), np.int32)
+                for r in range(plan.nranks):
+                    own, hal = plan.owned[r], plan.halo[r]
+                    w[r, :len(own)] = wake_floor[own]
+                    w[r, plan.K:plan.K + len(hal)] = wake_floor[hal]
+                wake_stacked = w
+            return wake_stacked
+
+        def level_plan(level: int) -> Tuple:
+            key = level
+            if key not in table_cache:
+                active_p = ((bins_h >= level)
+                            | (bins_h < wake_floor[:, None])) \
+                    & (mask_host > 0)
+                if not active_p.any():
+                    table_cache[key] = (active_p, None, None, None, None)
+                else:
+                    active_cells = active_p.any(axis=1)
+                    ship = self._exchange_set(plan, active_cells)
+                    slots = plan.ship_slots(ship) if ship else ShipSlots()
+                    tables, sig = self._fused_tables(
+                        plan, active_cells, slots, "fused_sub", wake_tbl(),
+                        level=level)
+                    table_cache[key] = (active_p, active_cells, slots,
+                                        tables, sig)
+            return table_cache[key]
+
+        def run_fused(tables, sig, scalars, final):
+            prog = self._fused_program(sig, final=final)
+            state_in = {name: res[name] for name in
+                        self._CELL_FIELDS + self._AUX_FIELDS + ("time",)}
+            out_state, changed = prog(state_in, tables, scalars)
+            res.update(out_state)
+            return changed
+
+        for n in range(1, nsub):
+            level = active_level(n, depth)
+            active_p, active_cells, slots, tables, sig = level_plan(level)
+            if not active_p.any():
+                continue
+            cycle_exported += slots.total
+            cycle_full += plan.cut_slots
+            self.halo_log.append({
+                "substep": self.substeps + n, "level": level,
+                "exported_slots": slots.total,
+                "full_slots": plan.cut_slots})
+
+            dt_d = (n - drifted_to) * dt_min
+            drifted_to = n
+            self.program_keys.add(("fused_force", level, sig[3]))
+            scalars = {"dt_drift": jnp.float32(dt_d),
+                       "level": jnp.int32(level),
+                       "dt_max": jnp.float32(dt_max_c),
+                       "depth": jnp.int32(depth),
+                       "u_floor": jnp.float32(u_floor)}
+            changed = run_fused(tables, sig, scalars, final=False)
+            changed_h = np.asarray(changed)
+            self.transfers.record("flags", changed_h.nbytes, boundary=False)
+            if changed_h.any():
+                # a deepening / wake-up: refresh the bins mirror for the
+                # changed ranks only, then re-derive the wake floors —
+                # the lone mid-cycle state-array readback, counted per
+                # event by the transfer probe
+                for r in np.nonzero(changed_h)[0]:
+                    own = plan.owned[int(r)]
+                    if not len(own):
+                        continue
+                    row = res.pull("bins", boundary=False, index=int(r))
+                    bins_h[own] = row[:len(own)]
+                self.bins_refreshes += 1
+                table_cache.clear()             # invalidate the level plans
+                new_floor = self._wake_floor(bins_h, mask_host)
+                if not np.array_equal(new_floor, wake_floor):
+                    wake_floor = new_floor
+                    wake_stacked = None         # invalidate on wake-up
+            updates += int(active_p.sum())
+            pair_tasks += int((active_cells[self._ci]
+                               | active_cells[self._cj]).sum())
+            force_substeps += 1
+
+        # final sync sub-step: everyone active, full pair lists, full cut
+        dt_d = (nsub - drifted_to) * dt_min
+        slots = plan.ship_slots(list(plan.cut)) if plan.cut else ShipSlots()
+        cycle_exported += slots.total
+        if plan.cut:
+            cycle_full += plan.cut_slots
+        tables, sig = self._fused_tables(plan, None, slots, "fused_final",
+                                         None)
+        self.program_keys.add(("fused_final", 0, sig[3]))
+        scalars = {"dt_drift": jnp.float32(dt_d), "level": jnp.int32(0),
+                   "dt_max": jnp.float32(dt_max_c),
+                   "depth": jnp.int32(depth),
+                   "u_floor": jnp.float32(u_floor)}
+        run_fused(tables, sig, scalars, final=True)
+        updates += nreal
+        pair_tasks += len(self._ci)
+
+        self._gather_resident(plan, res)
+        return {"updates": updates, "pair_tasks": pair_tasks,
+                "force_substeps": force_substeps,
+                "cycle_exported": cycle_exported,
+                "cycle_full": cycle_full}

@@ -160,6 +160,13 @@ def limit_neighbour_bins(bins: np.ndarray, mask: np.ndarray,
 
 
 # -------------------------------------------------------------------- state
+# the state layout, as field-name tuples: the single source of truth for
+# every code path that scatters/gathers/stacks TimeBinState field-by-field
+# (dist_timebins' resident buffers, collectives' fused-program outputs)
+STATE_CELL_FIELDS = ("pos", "vel", "mass", "u", "h", "mask")
+STATE_AUX_FIELDS = ("accel", "dudt", "rho", "omega", "bins", "t_start")
+
+
 class TimeBinState(NamedTuple):
     """Multi-dt engine state: the global-dt state plus per-particle bins and
     the stored thermodynamics inactive particles expose to their active
@@ -271,15 +278,18 @@ def _substep_density_phase(state: TimeBinState, pairs: PairList, pair_mask,
     return rho, omega, press, cs
 
 
-def _substep_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
-                         active, rho, omega, press, cs, wake_floor, dt_max,
-                         depth, u_floor, *, cfg: SPHConfig
-                         ) -> Tuple[TimeBinState, jax.Array]:
-    """Force + kick half of a bin-boundary update (second comm phase)."""
+def _apply_force_kick(state: TimeBinState, active, dv, du, rho, omega,
+                      wake_floor, dt_max, depth, u_floor, *, cfg: SPHConfig
+                      ) -> Tuple[TimeBinState, jax.Array]:
+    """Close/deepen/re-open the active bins given raw force-pass sums.
+
+    The elementwise tail of a bin-boundary update, split from the pair pass
+    so the distributed fused programs can compute the pair sums with the
+    halo exchange interleaved (``sph/collectives.py``) and still share this
+    exact update; :func:`_substep_force_phase` composes the two unchanged.
+    """
     cells = state.cells
     mask = cells.mask
-    dv, du = _force_pass(cells, pairs, rho, press, omega, cs, cfg,
-                         pair_mask=pair_mask)
     mask3 = mask[..., None]
     dv, du = dv * mask3, du * mask
     accel = jnp.where(active[..., None] > 0, dv, state.accel)
@@ -301,6 +311,17 @@ def _substep_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
     nact = jnp.sum(active).astype(jnp.int32)
     return state._replace(cells=cells, accel=accel, dudt=dudt, rho=rho,
                           omega=omega, bins=bins, t_start=t_start), nact
+
+
+def _substep_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
+                         active, rho, omega, press, cs, wake_floor, dt_max,
+                         depth, u_floor, *, cfg: SPHConfig
+                         ) -> Tuple[TimeBinState, jax.Array]:
+    """Force + kick half of a bin-boundary update (second comm phase)."""
+    dv, du = _force_pass(state.cells, pairs, rho, press, omega, cs, cfg,
+                         pair_mask=pair_mask)
+    return _apply_force_kick(state, active, dv, du, rho, omega, wake_floor,
+                             dt_max, depth, u_floor, cfg=cfg)
 
 
 def substep_active_mask(state: TimeBinState, level, wake_floor) -> jax.Array:
@@ -340,14 +361,11 @@ def _force_substep(state: TimeBinState, pairs: PairList, pair_mask, level,
                                 u_floor, cfg=cfg)
 
 
-def _final_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
-                       rho, omega, press, cs, dt_max, *, cfg: SPHConfig
-                       ) -> TimeBinState:
-    """Force + closing kick of the cycle-ending boundary."""
+def _apply_final_kick(state: TimeBinState, dv, du, rho, omega, dt_max,
+                      *, cfg: SPHConfig) -> TimeBinState:
+    """Closing kick of the cycle-ending boundary, given raw force sums."""
     cells = state.cells
     active = cells.mask
-    dv, du = _force_pass(cells, pairs, rho, press, omega, cs, cfg,
-                         pair_mask=pair_mask)
     mask3 = cells.mask[..., None]
     dv, du = dv * mask3, du * cells.mask
     elapsed = state.time - state.t_start
@@ -356,6 +374,15 @@ def _final_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
     return state._replace(cells=cells, accel=dv, dudt=du, rho=rho,
                           omega=omega,
                           t_start=jnp.full_like(state.t_start, state.time))
+
+
+def _final_force_phase(state: TimeBinState, pairs: PairList, pair_mask,
+                       rho, omega, press, cs, dt_max, *, cfg: SPHConfig
+                       ) -> TimeBinState:
+    """Force + closing kick of the cycle-ending boundary."""
+    dv, du = _force_pass(state.cells, pairs, rho, press, omega, cs, cfg,
+                         pair_mask=pair_mask)
+    return _apply_final_kick(state, dv, du, rho, omega, dt_max, cfg=cfg)
 
 
 def _force_final(state: TimeBinState, pairs: PairList, pair_mask, dt_max,

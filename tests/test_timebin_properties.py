@@ -1,0 +1,135 @@
+"""Property-based time-bin invariants (hypothesis).
+
+Randomised bin ladders and wake-up events over small random cell graphs,
+asserting the two safety properties the hierarchical integrator leans on:
+
+* the Saitoh–Makino neighbour limiter's fixpoint — after
+  ``limit_neighbour_bins``, no two neighbouring cells' deepest occupied
+  bins differ by more than ``delta`` (and the limiter only ever deepens);
+* wake-up visibility — a particle whose cell wake floor exceeds its bin is
+  *always* in the sub-step active mask, and a task graph rebuilt after a
+  wake event never drops a task touching the woken cell from the active
+  subgraph (the scheduler-side face of the same guarantee).
+
+Skips cleanly when hypothesis is absent (see requirements-dev.txt).
+"""
+
+import types
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.sph.engine import build_taskgraph  # noqa: E402
+from repro.sph.cellgrid import PairList  # noqa: E402
+from repro.sph.timebins import (TimeBinState, limit_neighbour_bins,  # noqa: E402
+                                substep_active_mask)
+from repro.sph.cellgrid import ParticleCells  # noqa: E402
+
+MAX_BIN = 6
+
+
+@st.composite
+def cell_graphs(draw):
+    """A small random cell graph: bins, mask and an undirected pair list."""
+    ncells = draw(st.integers(2, 10))
+    cap = draw(st.integers(1, 4))
+    bins = draw(st.lists(
+        st.lists(st.integers(0, MAX_BIN), min_size=cap, max_size=cap),
+        min_size=ncells, max_size=ncells))
+    mask = draw(st.lists(
+        st.lists(st.integers(0, 1), min_size=cap, max_size=cap),
+        min_size=ncells, max_size=ncells))
+    npairs = draw(st.integers(1, 3 * ncells))
+    ci = draw(st.lists(st.integers(0, ncells - 1), min_size=npairs,
+                       max_size=npairs))
+    cj = draw(st.lists(st.integers(0, ncells - 1), min_size=npairs,
+                       max_size=npairs))
+    return (np.array(bins, np.int32), np.array(mask, np.float32),
+            np.array(ci), np.array(cj))
+
+
+@given(cell_graphs(), st.integers(1, 3))
+@settings(max_examples=50, deadline=None)
+def test_limiter_fixpoint_neighbours_within_delta(graph, delta):
+    bins, mask, ci, cj = graph
+    out = limit_neighbour_bins(bins, mask, ci, cj, delta=delta,
+                               max_bin=MAX_BIN)
+    # the limiter only deepens, never shallows, and only touches real slots
+    assert (out >= bins).all()
+    np.testing.assert_array_equal(out[mask == 0], bins[mask == 0])
+    assert out.max(initial=0) <= MAX_BIN
+    # fixpoint: neighbouring cells' deepest occupied bins differ ≤ delta —
+    # and every particle individually respects its neighbourhood's floor
+    deep = np.where(mask > 0, out, -10 ** 6).max(axis=1)
+    for a, b in zip(ci, cj):
+        if deep[a] < -10 ** 5 or deep[b] < -10 ** 5:
+            continue                     # an empty cell constrains nothing
+        assert abs(deep[a] - deep[b]) <= delta, (a, b, deep[a], deep[b])
+        floor = max(deep[a], deep[b]) - delta
+        for c in (a, b):
+            real = out[c][mask[c] > 0]
+            assert (real >= min(max(floor, 0), MAX_BIN)).all()
+
+
+@given(cell_graphs(), st.integers(0, MAX_BIN), st.integers(0, MAX_BIN))
+@settings(max_examples=50, deadline=None)
+def test_active_mask_always_contains_woken_particles(graph, level, wake):
+    bins, mask, ci, cj = graph
+    ncells, cap = bins.shape
+    wake_floor = np.full(ncells, wake, np.int32)
+    cells = ParticleCells(pos=jnp.zeros((ncells, cap, 3)),
+                          vel=jnp.zeros((ncells, cap, 3)),
+                          mass=jnp.ones((ncells, cap)),
+                          u=jnp.ones((ncells, cap)),
+                          h=jnp.ones((ncells, cap)),
+                          mask=jnp.asarray(mask))
+    state = TimeBinState(cells=cells,
+                         accel=jnp.zeros((ncells, cap, 3)),
+                         dudt=jnp.zeros((ncells, cap)),
+                         rho=jnp.ones((ncells, cap)),
+                         omega=jnp.ones((ncells, cap)),
+                         bins=jnp.asarray(bins),
+                         t_start=jnp.zeros((ncells, cap)),
+                         time=jnp.zeros(()))
+    active = np.asarray(substep_active_mask(
+        state, jnp.int32(level), jnp.asarray(wake_floor)))
+    woken = (bins < wake_floor[:, None]) & (mask > 0)
+    boundary = (bins >= level) & (mask > 0)
+    # every woken or at-boundary real particle is active; padded never
+    assert (active[woken] > 0).all()
+    assert (active[boundary] > 0).all()
+    assert (active[mask == 0] == 0).all()
+
+
+@given(cell_graphs(), st.integers(1, MAX_BIN), st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_active_subgraph_never_drops_woken_cells(graph, level, delta):
+    """A wake-up event (the limiter deepening a cell's bin to ≥ level)
+    must surface every task touching that cell in the rebuilt active
+    subgraph — no task of a woken cell may be skipped."""
+    bins, mask, ci, cj = graph
+    ncells = bins.shape[0]
+    limited = limit_neighbour_bins(bins, mask, ci, cj, delta=delta,
+                                   max_bin=MAX_BIN)
+    cell_bins = np.where((mask > 0).any(axis=1),
+                         np.where(mask > 0, limited, -1).max(axis=1), -1)
+    spec = types.SimpleNamespace(ncells=ncells)
+    pairs = PairList(ci=np.array(ci), cj=np.array(cj),
+                     shift=np.zeros((len(ci), 3), np.float32))
+    occ = (mask > 0).sum(axis=1).astype(np.int64)
+    g = build_taskgraph(spec, pairs, occ, cell_bins=cell_bins, level=level)
+    sub = g.active_subgraph()
+    woken_cells = {c for c in range(ncells)
+                   if cell_bins[c] >= level
+                   and np.where(mask[c] > 0, bins[c], -1).max(initial=-1)
+                   < level}
+    for tid, task in g.tasks.items():
+        touches_active = any(cell_bins[c] >= level for c in task.resources)
+        if any(c in woken_cells for c in task.resources) or touches_active:
+            assert task.active, (task.kind, task.resources)
+            assert tid in sub.tasks, (task.kind, task.resources)
