@@ -1,0 +1,158 @@
+"""Per-phase timings of one traced Sedov run + tracer overhead (task plots).
+
+Runs the distributed time-bin engine (4 emulated ranks, collective
+transport, device residency) with ``observe=True`` for a few cycles and
+reports the median per-span wall time of every traced phase — the numbers
+behind the task-timeline plot — plus the cost of the tracer itself
+(median seconds per recorded span, measured over 20k no-payload spans).
+
+Results land in ``benchmarks/results/observability_bench.json`` and, as
+the repo-level benchmark artifact, in ``BENCH_observability.json`` at the
+repo root (per-phase medians, run provenance, metrics schema version).
+
+The measurement runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the mesh exists
+regardless of how the parent process configured jax.
+
+Run:  PYTHONPATH=src python benchmarks/observability_bench.py [n_side] [ncycles]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+try:                                    # runnable as module or script
+    from .common import emit
+except ImportError:                     # pragma: no cover
+    from common import emit
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(nranks)d"
+import sys, json
+sys.path.insert(0, %(src)r)
+import numpy as np
+import jax
+jax.config.update("jax_default_matmul_precision", "float32")
+from repro.sph import SimulationSpec, SPHConfig, build_simulation
+from repro.observability import UMBRELLA_SPANS
+
+spec = SimulationSpec(
+    scenario="sedov",
+    scenario_params={"n_side": %(n_side)d, "e0": 1.0, "seed": 0},
+    physics=SPHConfig(alpha_visc=1.0, cfl=0.15),
+    integrator="timebin", backend="distributed", ranks=%(nranks)d,
+    dt_max=0.02, max_depth=4,
+    transport="collective", residency="device", observe=True)
+sim = build_simulation(spec)
+for _ in range(%(warm)d):                         # compile + bucket settle
+    sim.step()
+mark = len(sim.observer.tracer.spans)
+for _ in range(%(ncycles)d):
+    sim.step()
+spans = sim.observer.tracer.spans[mark:]
+
+per = {}
+for s in spans:
+    if s.name in UMBRELLA_SPANS:
+        continue
+    per.setdefault(s.name, []).append(s.dur * 1e6)
+rec = sim.observer.records[-1]
+out = {
+    "phases": {k: {"median_us": float(np.median(v)), "count": len(v)}
+               for k, v in sorted(per.items())},
+    "imbalance": rec.get("imbalance"),
+    "dead_frac": rec.get("dead_frac"),
+    "total_compiles": rec.get("total_compiles"),
+    "force_substeps": rec.get("force_substeps"),
+    "backend": jax.default_backend(),
+    "device_count": jax.device_count(),
+    "jax": jax.__version__,
+}
+print("RESULT_JSON=" + json.dumps(out, default=str))
+"""
+
+
+def _tracer_overhead_us(n: int = 20000) -> float:
+    """Median seconds per recorded span, enabled tracer, no payload."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.observability import Tracer
+    tr = Tracer()
+    samples = []
+    for _ in range(20):
+        t0 = time.perf_counter()
+        for _ in range(n // 20):
+            with tr.span("bench", rank=0):
+                pass
+        samples.append((time.perf_counter() - t0) / (n // 20))
+    samples.sort()
+    return 1e6 * samples[len(samples) // 2]
+
+
+def run(n_side=6, ncycles=3, nranks=4, warm=2) -> list:
+    script = _WORKER % {"nranks": nranks, "n_side": n_side,
+                        "ncycles": ncycles, "warm": warm,
+                        "src": os.path.join(ROOT, "src")}
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"observability_bench worker failed:\n{proc.stderr[-3000:]}")
+    payload = next(line for line in proc.stdout.splitlines()
+                   if line.startswith("RESULT_JSON="))
+    res = json.loads(payload[len("RESULT_JSON="):])
+    overhead_us = _tracer_overhead_us()
+
+    rows = []
+    for name, ph in res["phases"].items():
+        rows.append({
+            "name": f"observability/phase/{name}/median_us",
+            "us_per_call": round(ph["median_us"], 1),
+            "derived": f"count={ph['count']};nranks={nranks};"
+                       f"n_side={n_side};ncycles={ncycles}"})
+    rows.append({
+        "name": "observability/tracer_span_overhead/median_us",
+        "us_per_call": round(overhead_us, 3),
+        "derived": "enabled tracer, empty span body"})
+    rows.append({
+        "name": "observability/run/imbalance",
+        "us_per_call": round(res.get("imbalance") or 0.0, 4),
+        "derived": f"dead_frac={res.get('dead_frac'):.4f};"
+                   f"total_compiles={res.get('total_compiles')}"})
+    emit(rows, "observability_bench")
+
+    from repro.observability import METRICS_SCHEMA_VERSION
+    bench = {
+        "benchmark": "observability",
+        "scenario": "sedov",
+        "nranks": nranks, "n_side": n_side,
+        "ncycles": ncycles, "warmup_cycles": warm,
+        "residency": "device", "transport": "collective",
+        "metrics_schema_version": METRICS_SCHEMA_VERSION,
+        "env": {"python": sys.version.split()[0],
+                "jax": res.get("jax"),
+                "backend": res.get("backend"),
+                "device_count": res.get("device_count")},
+        "phase_median_us": {k: v["median_us"]
+                            for k, v in res["phases"].items()},
+        "phase_counts": {k: v["count"] for k, v in res["phases"].items()},
+        "tracer_span_overhead_us": overhead_us,
+        "imbalance": res.get("imbalance"),
+        "dead_frac": res.get("dead_frac"),
+        "total_compiles": res.get("total_compiles"),
+    }
+    with open(os.path.join(ROOT, "BENCH_observability.json"), "w") as f:
+        json.dump(bench, f, indent=1, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    n_side = int(sys.argv[1]) if len(sys.argv) > 1 else 6
+    ncycles = int(sys.argv[2]) if len(sys.argv) > 2 else 3
+    run(n_side=n_side, ncycles=ncycles)

@@ -43,6 +43,31 @@ def _classify(exc: BaseException) -> str:
     return "error"
 
 
+def _env_provenance() -> dict:
+    """What ran these numbers: versions, backend, devices, XLA flags."""
+    env = {"python": sys.version.split()[0],
+           "platform": sys.platform,
+           "xla_flags": os.environ.get("XLA_FLAGS", ""),
+           "jax_platforms": os.environ.get("JAX_PLATFORMS", "")}
+    try:
+        import jax
+        import jaxlib
+        env["jax"] = jax.__version__
+        env["jaxlib"] = jaxlib.__version__
+        env["backend"] = jax.default_backend()
+        env["device_count"] = jax.device_count()
+    except Exception as e:  # pragma: no cover - jax is a baked-in dep
+        env["jax"] = f"unavailable: {type(e).__name__}"
+    try:
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+        from repro.observability import METRICS_SCHEMA_VERSION
+        env["metrics_schema_version"] = METRICS_SCHEMA_VERSION
+    except Exception:  # pragma: no cover
+        pass
+    return env
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     # module names, imported lazily inside the try below: a missing
@@ -57,6 +82,7 @@ def main() -> None:
         ("kernels_bench", "kernels_bench"),
         ("halo_transport (host vs collective vs fused wire)",
          "halo_transport"),
+        ("observability (task plots)", "observability_bench"),
     ]
     summary = {}
     failures = []
@@ -83,6 +109,7 @@ def main() -> None:
                               "seconds": round(time.time() - t0, 1)}
             print(f"# {label} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
+    summary["_env"] = _env_provenance()
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "summary.json"), "w") as f:
         json.dump(summary, f, indent=1)

@@ -1,8 +1,20 @@
-"""Rebuild the §Roofline table from cached dry-run JSONs.
+"""Rebuild the §Roofline table from cached dry-run JSONs — and render
+SWIFT-style task timelines from observability traces.
 
-Recomputes the three terms with the *current* formulas (so analysis fixes
-don't require recompiling 70 cells) and emits the markdown table for
-EXPERIMENTS.md plus per-cell one-liners on what would move the bottleneck.
+Two modes:
+
+* ``python -m repro.analysis.report`` (no positional arg): recomputes the
+  roofline three-term table with the *current* formulas (so analysis fixes
+  don't require recompiling 70 cells) and emits the markdown table for
+  EXPERIMENTS.md plus per-cell one-liners on what would move the
+  bottleneck.
+* ``python -m repro.analysis.report trace.json [--metrics metrics.jsonl]``:
+  renders the Chrome trace exported by a ``SimulationSpec(observe=True)``
+  run as a text task plot — one row per rank, one character per time
+  bucket, dominant task per bucket (the terminal rendition of SWIFT §4's
+  task-timeline figures) — followed by the per-cycle imbalance/dead-time
+  table and the measured-vs-modelled task-cost ratios from the metrics
+  log.
 """
 
 from __future__ import annotations
@@ -112,9 +124,119 @@ def advice_list(results_dir: str, variant: str = "baseline",
     return "\n".join(lines)
 
 
+# ----------------------------------------------------- task-timeline report
+def load_trace(path: str) -> Dict:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if isinstance(doc, list):                    # bare event-array flavour
+        doc = {"traceEvents": doc}
+    return doc
+
+
+def _task_slices(doc: Dict) -> List[Dict]:
+    from ..observability import UMBRELLA_SPANS
+    return [e for e in doc.get("traceEvents", [])
+            if e.get("ph") == "X" and e.get("name") not in UMBRELLA_SPANS]
+
+
+def render_timeline(doc: Dict, width: int = 72) -> str:
+    """One row per rank, one char per time bucket, dominant task wins.
+
+    The terminal rendition of SWIFT's task plot: load imbalance shows as
+    rows going quiet ('.') while others still work; communication-heavy
+    stretches show as exchange characters lining up across rows.
+    """
+    xs = _task_slices(doc)
+    if not xs:
+        return "(no task slices in trace)"
+    t0 = min(e["ts"] for e in xs)
+    t1 = max(e["ts"] + e["dur"] for e in xs)
+    span = max(t1 - t0, 1e-9)
+    names = sorted({e["name"] for e in xs})
+    chars: Dict[str, str] = {}
+    used = set()
+    for nm in names:
+        for ch in (nm[:1].upper() + nm[1:] + "0123456789*#@"):
+            ch = ch.upper()
+            if ch not in used and not ch.isspace():
+                chars[nm] = ch
+                used.add(ch)
+                break
+    rows = sorted({e["tid"] for e in xs})
+    lines = [f"task timeline: {span / 1e6:.4f} s over {width} buckets "
+             f"('.' = dead time)"]
+    bw = span / width
+    for r in rows:
+        cover: List[Dict[str, float]] = [{} for _ in range(width)]
+        for e in xs:
+            if e["tid"] != r:
+                continue
+            e0, e1 = e["ts"] - t0, e["ts"] + e["dur"] - t0
+            b0 = max(int(e0 / bw), 0)
+            b1 = min(int(e1 / bw), width - 1)
+            for b in range(b0, b1 + 1):
+                ov = max(0.0, min(e1, (b + 1) * bw) - max(e0, b * bw))
+                cover[b][e["name"]] = cover[b].get(e["name"], 0.0) + ov
+        line = "".join(chars[max(c, key=c.get)] if c else "."
+                       for c in cover)
+        lines.append(f"rank {r:>3} |{line}|")
+    legend = "  ".join(f"{c}={n}"
+                       for n, c in sorted(chars.items(), key=lambda kv: kv[1]))
+    lines.append(f"legend: {legend}")
+    return "\n".join(lines)
+
+
+def metrics_summary(records: List[Dict]) -> str:
+    """Per-cycle imbalance/dead-time table + measured-vs-modelled costs."""
+    if not records:
+        return "(no metrics records)"
+    lines = ["per-cycle summary:",
+             f"{'cycle':>5} {'wall (s)':>10} {'imbalance':>10} "
+             f"{'dead_frac':>10} {'updates':>10} {'compiles':>9}"]
+    for r in records:
+        imb = r.get("imbalance")
+        dead = r.get("dead_frac")
+        lines.append(
+            f"{r.get('cycle', 0):>5} {r.get('wall', 0.0):>10.4f} "
+            f"{'-' if imb is None else format(imb, '.3f'):>10} "
+            f"{'-' if dead is None else format(dead, '.3f'):>10} "
+            f"{r.get('updates', 0):>10} "
+            f"{str(r.get('total_compiles', '-')):>9}")
+    last = records[-1]
+    ratios = last.get("cost_ratios") or {}
+    if ratios:
+        units = last.get("observed_units") or {}
+        lines += ["",
+                  "measured vs modelled task cost (rate ratio; >1 = task "
+                  "costlier per unit than the model assumed):",
+                  f"{'task kind':<16} {'units':>12} {'ratio':>12}"]
+        for k in sorted(ratios):
+            lines.append(f"{k:<16} {units.get(k, 0):>12.4g} "
+                         f"{ratios[k]:>12.4g}")
+    return "\n".join(lines)
+
+
+def trace_report(trace_path: str, metrics_path: Optional[str] = None,
+                 width: int = 72) -> str:
+    doc = load_trace(trace_path)
+    parts = [render_timeline(doc, width=width)]
+    if metrics_path:
+        from ..observability import read_metrics_jsonl
+        parts += ["", metrics_summary(read_metrics_jsonl(metrics_path))]
+    return "\n".join(parts)
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="Chrome-trace JSON from an observe=True run; "
+                         "when given, render the task timeline instead of "
+                         "the roofline table")
+    ap.add_argument("--metrics", default=None,
+                    help="per-cycle metrics JSONL to summarise under the "
+                         "timeline")
+    ap.add_argument("--width", type=int, default=72)
     ap.add_argument("--dir", default=os.path.join(
         os.path.dirname(__file__), "..", "..", "..", "benchmarks",
         "results", "dryrun"))
@@ -122,6 +244,9 @@ def main():
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--advice", action="store_true")
     args = ap.parse_args()
+    if args.trace:
+        print(trace_report(args.trace, args.metrics, width=args.width))
+        return
     print(markdown_table(args.dir, args.variant, args.mesh))
     if args.advice:
         print()

@@ -71,6 +71,12 @@ class CostModel:
     default_rate: float = 1e-9
     asymptotic: Dict[str, Callable[..., float]] = field(
         default_factory=lambda: dict(_SPH_ASYMPTOTIC))
+    # measured-cost ledger fed by the observability layer: per task kind,
+    # [seconds, units, calls] accumulated over the run, plus the rate each
+    # kind carried *before* its first measurement (the modelled baseline
+    # the measured-vs-modelled report compares against)
+    observed: Dict[str, list] = field(default_factory=dict)
+    modelled_baseline: Dict[str, float] = field(default_factory=dict)
 
     def units(self, kind: str, n: int, m: int = 0) -> float:
         fn = self.asymptotic.get(kind)
@@ -128,6 +134,64 @@ class CostModel:
         old = self.rates.get(kind)
         self.rates[kind] = rate if old is None else (
             (1 - self.ema) * old + self.ema * rate)
+
+    # ----------------------------------------------- measured-cost feedback
+    def observe(self, kind: str, units: float, seconds: float) -> None:
+        """Fold one measured task execution into the model (paper §3.2:
+        "after a task has been executed, its effective computational cost
+        is computed and used").
+
+        Unlike :meth:`update`, the caller supplies the work units directly
+        (live pair count, shipped slots — whatever the span measured), so
+        task kinds the asymptotic table doesn't know about still refine.
+        The rate each kind carried before its first observation is
+        snapshotted as the modelled baseline for
+        :meth:`measured_vs_modelled`.
+        """
+        if units <= 0 or seconds <= 0:
+            return
+        if kind not in self.modelled_baseline:
+            self.modelled_baseline[kind] = self.rates.get(kind,
+                                                          self.default_rate)
+        acc = self.observed.setdefault(kind, [0.0, 0.0, 0])
+        acc[0] += float(seconds)
+        acc[1] += float(units)
+        acc[2] += 1
+        rate = seconds / units
+        old = self.rates.get(kind)
+        self.rates[kind] = rate if old is None else (
+            (1 - self.ema) * old + self.ema * rate)
+
+    def observed_units(self, kind: str) -> float:
+        """Total measured work units folded in for ``kind`` (0 if never
+        observed)."""
+        acc = self.observed.get(kind)
+        return acc[1] if acc else 0.0
+
+    def observed_seconds(self, kind: str) -> float:
+        acc = self.observed.get(kind)
+        return acc[0] if acc else 0.0
+
+    def observed_rate(self, kind: str) -> Optional[float]:
+        """Mean measured seconds-per-unit over the whole run (not the
+        EMA-refined ``rates`` entry)."""
+        acc = self.observed.get(kind)
+        if not acc or acc[1] <= 0:
+            return None
+        return acc[0] / acc[1]
+
+    def measured_vs_modelled(self) -> Dict[str, float]:
+        """Per-kind ratio of the mean measured rate to the rate the model
+        assumed before any measurement. 1.0 = the analytic model was
+        right; ≫1 = the task is more expensive per unit than modelled
+        (the decomposition under-weights it)."""
+        out = {}
+        for kind, acc in self.observed.items():
+            if acc[1] <= 0:
+                continue
+            base = self.modelled_baseline.get(kind, self.default_rate)
+            out[kind] = (acc[0] / acc[1]) / base if base > 0 else float("inf")
+        return out
 
 
 # --------------------------------------------------------------- LM analytic

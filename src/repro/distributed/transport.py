@@ -38,11 +38,14 @@ the compiler. This module provides the generic machinery for that:
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
+
+from ..observability.tracer import NULL_TRACER
 
 TRANSPORTS = ("host", "collective")
 RESIDENCIES = ("host", "device")
@@ -113,28 +116,70 @@ class BucketPolicy:
         return self._bucket[key]
 
 
+class _SignatureCountingProgram:
+    """Fallback compile counter for callables without a jit cache.
+
+    Wraps a program that exposes no ``_cache_size`` (not produced by
+    ``jax.jit``, or an older/newer jax without that private hook) and
+    counts the distinct flattened call signatures — pytree structure plus
+    per-leaf (shape, dtype) — which is exactly the key a jit cache would
+    compile per. The count is an upper bound on true compiles but, unlike
+    the old silent ``-1``, it is monotone, non-negative, and agrees with
+    the jit cache for shape-keyed programs.
+    """
+
+    __slots__ = ("_fn", "_signatures", "__wrapped__")
+
+    def __init__(self, fn):
+        self._fn = fn
+        self.__wrapped__ = fn
+        self._signatures = set()
+
+    def __call__(self, *args, **kwargs):
+        try:
+            import jax
+            leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+            sig = (treedef, tuple(
+                (getattr(x, "shape", None),
+                 str(getattr(x, "dtype", type(x).__name__)))
+                for x in leaves))
+            self._signatures.add(sig)
+        except Exception:
+            self._signatures.add(("<unflattenable>",))
+        return self._fn(*args, **kwargs)
+
+    def _cache_size(self) -> int:
+        return len(self._signatures)
+
+
 class CompileProbe:
     """Registry of jitted programs with true compile counts.
 
     ``register(name, fn)`` tracks a ``jax.jit``-wrapped callable;
     ``counts()`` reads each program's jit cache size — the number of
     distinct XLA compilations actually performed — so tests can assert the
-    bucketing bounds recompiles without guessing from shapes.
+    bucketing bounds recompiles without guessing from shapes. A callable
+    without a jit cache is detected *at registration* and wrapped in a
+    :class:`_SignatureCountingProgram` (with a :class:`RuntimeWarning`),
+    so ``counts()`` never reports the old silent ``-1``.
     """
 
     def __init__(self):
         self._fns: Dict[str, object] = {}
 
     def register(self, name: str, fn):
+        if not callable(getattr(fn, "_cache_size", None)):
+            warnings.warn(
+                f"compile probe: program {name!r} exposes no jit cache "
+                "(_cache_size); counting distinct call signatures instead — "
+                "compile counts for this program are an upper bound",
+                RuntimeWarning, stacklevel=2)
+            fn = _SignatureCountingProgram(fn)
         self._fns[name] = fn
         return fn
 
     def counts(self) -> Dict[str, int]:
-        out = {}
-        for name, fn in self._fns.items():
-            size = getattr(fn, "_cache_size", None)
-            out[name] = int(size()) if callable(size) else -1
-        return out
+        return {name: int(fn._cache_size()) for name, fn in self._fns.items()}
 
     def total_compiles(self) -> int:
         return sum(max(c, 0) for c in self.counts().values())
@@ -364,16 +409,24 @@ class Transport:
     """
 
     kind = "abstract"
+    # observability hook: rebound to the run's tracer by the engine when
+    # SimulationSpec(observe=True); an exchange is SWIFT's send/recv task
+    # and shows up on every participating rank's timeline row
+    tracer = NULL_TRACER
 
     def prepare(self, edges: Sequence[Tuple[int, int]]) -> None:
         """New decomposition: the rank-to-rank export edge list changed."""
 
     def exchange(self, slots: ShipSlots, fields: List[List],
-                 stream: str = "substep") -> List[List]:
+                 stream: str = "substep",
+                 label: Optional[str] = None) -> List[List]:
         """``stream`` names the demand stream for bucket sizing: exchanges
         with systematically different volumes (activity-restricted
         sub-steps vs the full-cut cycle sync) must not share a bucket, or
-        the hysteresis would churn once per cycle."""
+        the hysteresis would churn once per cycle. ``label`` names the
+        traced span (e.g. ``"exchange1"``/``"exchange2"``) — engine
+        position of this exchange in the sub-step, not its bucket
+        stream."""
         raise NotImplementedError
 
     def stats(self) -> Dict[str, object]:
@@ -396,7 +449,10 @@ class HostTransport(Transport):
         self.exchanges = 0
 
     def exchange(self, slots: ShipSlots, fields: List[List],
-                 stream: str = "substep") -> List[List]:
+                 stream: str = "substep",
+                 label: Optional[str] = None) -> List[List]:
+        tr = self.tracer
+        t0 = tr.now() if tr.enabled else 0.0
         nranks = max(len(f) for f in fields)
         arrays = [[np.array(fr) for fr in f] for f in fields]
         self.host_bytes += 2 * sum(a.nbytes for f in arrays for a in f)
@@ -405,8 +461,13 @@ class HostTransport(Transport):
             for (srow, drow) in pairs:
                 for f in range(len(arrays)):
                     arrays[f][d][drow] = arrays[f][s][srow]
-        return [[jnp.asarray(arrays[f][r]) for r in range(nranks)]
-                for f in range(len(arrays))]
+        out = [[jnp.asarray(arrays[f][r]) for r in range(nranks)]
+               for f in range(len(arrays))]
+        if tr.enabled:
+            tr.record_all(range(nranks), label or "exchange", t0,
+                          stream=stream, units=slots.total,
+                          kind="host", collective=1)
+        return out
 
     def stats(self) -> Dict[str, object]:
         return {"kind": self.kind, "exchanges": self.exchanges,

@@ -1,0 +1,54 @@
+"""Unified metrics registry: one API over the engines' scattered ledgers.
+
+The engines already measure a lot — :class:`~repro.distributed.transport.
+TransferProbe` (host↔device bytes by field), :class:`~repro.distributed.
+transport.CompileProbe` (true XLA compile counts), :class:`~repro.
+distributed.transport.BucketPolicy` (grow/shrink events), the halo export
+counters in ``sph/dist_timebins.py`` — but each behind its own ad-hoc
+accessor. The :class:`MetricsRegistry` absorbs them behind two primitives:
+
+* **counters** — monotonically non-decreasing totals (bytes moved, compiles
+  performed, slots shipped, bucket events). ``count(name, total)`` adopts a
+  ledger's cumulative value; ``inc(name, delta)`` accumulates directly.
+* **gauges** — point-in-time values (per-cycle load imbalance, dead-time
+  fraction, bin-occupancy imbalance).
+
+``snapshot()`` returns a plain-JSON view; the per-cycle JSONL sink writes
+one snapshot-bearing record per cycle (see ``observer.py``). The schema
+version below is stamped into every record and into the benchmark
+provenance (``benchmarks/run.py``), so downstream consumers can detect
+field renames across PRs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+# bump when metric record field names / meanings change
+METRICS_SCHEMA_VERSION = 1
+
+
+class MetricsRegistry:
+    """Counters + gauges with a JSON-safe snapshot."""
+
+    def __init__(self):
+        self.counters: Dict[str, float] = {}
+        self.gauges: Dict[str, float] = {}
+
+    # ------------------------------------------------------------- counters
+    def inc(self, name: str, delta: float = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + delta
+
+    def count(self, name: str, total: float) -> None:
+        """Adopt a ledger's cumulative total. Counters never go backwards —
+        a regressing source (a probe reset mid-run) keeps the high-water
+        mark rather than corrupting the monotonicity contract."""
+        self.counters[name] = max(self.counters.get(name, 0), total)
+
+    # --------------------------------------------------------------- gauges
+    def gauge(self, name: str, value: float) -> None:
+        self.gauges[name] = value
+
+    # ------------------------------------------------------------- snapshot
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {"counters": dict(self.counters), "gauges": dict(self.gauges)}

@@ -1,0 +1,225 @@
+"""Run-level observer: merges span streams + engine ledgers per cycle.
+
+One :class:`RunObserver` is attached per run (``SimulationSpec(observe=
+True)`` → ``build_simulation`` wires its tracer into the engine and its
+transport). After every cycle the API layer calls :meth:`RunObserver.
+end_cycle`, which
+
+* folds the cycle's spans into per-phase wall/count/units aggregates and
+  per-rank busy time (SWIFT's task plot, reduced: imbalance = max/mean of
+  per-rank *distinguishable* work, dead time = cycle wall not covered by
+  any task);
+* copies the engine's ledgers **verbatim** — ``TransferProbe.stats()``,
+  ``CompileProbe.counts()``, transport stats, halo export counters — so
+  the JSONL record's byte/compile numbers agree exactly with the probes
+  (asserted by ``python -m repro.observability`` and the tests);
+* feeds measured (units, seconds) pairs into the
+  :class:`~repro.core.cost_model.CostModel` (``observe``), closing the
+  loop the ROADMAP's online task-cost-feedback repartitioning item needs:
+  the report prints measured-vs-modelled rate ratios per task kind.
+
+The record layout (one JSONL line per cycle) is versioned by
+:data:`~repro.observability.metrics.METRICS_SCHEMA_VERSION`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.cost_model import CostModel
+from .metrics import METRICS_SCHEMA_VERSION, MetricsRegistry
+from .sinks import jsonify, write_chrome_trace, write_metrics_jsonl
+from .tracer import NULL_TRACER, Tracer
+
+# umbrella spans cover a whole cycle/step — they time the container, not a
+# task, and must not count toward any rank's busy time
+UMBRELLA_SPANS = frozenset({"cycle", "step", "engine_step"})
+
+# stats keys copied into the per-cycle record when the engine provides them
+_STAT_KEYS = ("t", "dt_max", "dt", "depth", "substeps", "force_substeps",
+              "updates", "global_equiv_updates", "pair_tasks",
+              "halo_exported_slots", "halo_full_slots", "nranks",
+              "residency")
+
+
+@dataclass(frozen=True)
+class ObserveSpec:
+    """What to observe. ``SimulationSpec(observe=True)`` coerces to the
+    all-on default; ``observe=ObserveSpec(enabled=True, trace=False)``
+    keeps the metrics log without span recording/fencing."""
+    enabled: bool = False
+    trace: bool = True
+    metrics: bool = True
+
+
+class RunObserver:
+    """Collects one run's trace + per-cycle metrics records."""
+
+    def __init__(self, spec: ObserveSpec = ObserveSpec(enabled=True),
+                 cost_model: Optional[CostModel] = None):
+        self.spec = spec
+        self.tracer: Tracer = Tracer() if spec.trace else NULL_TRACER
+        self.registry = MetricsRegistry()
+        self.records: List[Dict[str, Any]] = []
+        self.cycle = 0
+        self._span_mark = 0
+        # fallback cost model when the engine doesn't carry one (local
+        # quadrants) — the measured-vs-modelled report works everywhere
+        self._own_cost_model = cost_model or CostModel(rates={})
+
+    # ---------------------------------------------------------- per cycle
+    def end_cycle(self, sim, stats: Dict[str, Any]) -> Dict[str, Any]:
+        eng = getattr(sim, "engine", sim)
+        spans = self.tracer.spans[self._span_mark:]
+        self._span_mark = len(self.tracer.spans)
+
+        phase_wall: Dict[str, float] = {}
+        phase_count: Dict[str, int] = {}
+        phase_units: Dict[str, float] = {}
+        busy: Dict[int, float] = {}
+        work: Dict[int, float] = {}
+        cm = getattr(eng, "_cost_model", None) or self._own_cost_model
+        seen_collective = set()
+        for s in spans:
+            if s.name in UMBRELLA_SPANS:
+                continue
+            a = s.attrs or {}
+            dur = s.dur
+            phase_wall[s.name] = phase_wall.get(s.name, 0.0) + dur
+            phase_count[s.name] = phase_count.get(s.name, 0) + 1
+            busy[s.rank] = busy.get(s.rank, 0.0) + dur
+            collective = bool(a.get("collective"))
+            if not collective:
+                work[s.rank] = work.get(s.rank, 0.0) + dur
+            units = a.get("units", a.get("pairs"))
+            if units:
+                # a collective span is one task duplicated onto every
+                # participating rank's row — fold its cost/units once
+                key = (s.name, s.t0, s.t1)
+                if collective:
+                    if key in seen_collective:
+                        continue
+                    seen_collective.add(key)
+                phase_units[s.name] = phase_units.get(s.name, 0.0) \
+                    + float(units)
+                if hasattr(cm, "observe"):
+                    cm.observe(s.name, float(units), dur)
+
+        rec: Dict[str, Any] = {
+            "schema": METRICS_SCHEMA_VERSION,
+            "cycle": self.cycle,
+            "wall": float(stats.get("wall", 0.0)),
+        }
+        for k in _STAT_KEYS:
+            if k in stats:
+                rec[k] = stats[k]
+        if "bin_hist" in stats:
+            rec["bin_hist"] = [int(x) for x in np.asarray(stats["bin_hist"])]
+        if spans:
+            rec["phase_wall"] = phase_wall
+            rec["phase_count"] = phase_count
+            rec["phase_units"] = phase_units
+            rec["rank_busy"] = {int(r): v for r, v in sorted(busy.items())}
+            base = work if work else busy
+            vals = list(base.values())
+            mean = sum(vals) / len(vals) if vals else 0.0
+            rec["imbalance"] = (max(vals) / mean) if mean > 0 else 1.0
+            wall = rec["wall"]
+            if wall > 0 and busy:
+                mean_busy = sum(busy.values()) / len(busy)
+                rec["dead_frac"] = max(0.0, 1.0 - mean_busy / wall)
+
+        # ---- engine ledgers, copied verbatim (exact-agreement contract)
+        transfers = getattr(eng, "transfers", None)
+        if transfers is not None:
+            rec["transfers"] = transfers.stats()
+        probe = getattr(eng, "probe", None)
+        if probe is not None:
+            rec["compiles"] = probe.counts()
+            rec["total_compiles"] = probe.total_compiles()
+        transport = getattr(eng, "_transport", None)
+        if transport is not None:
+            rec["transport"] = transport.stats()
+        nbucket = 0
+        fused = getattr(eng, "_fused_buckets", None)
+        if fused is not None:
+            nbucket += len(fused.events)
+        if transport is not None and hasattr(transport, "buckets"):
+            nbucket += len(transport.buckets.events)
+        if fused is not None or transport is not None:
+            rec["bucket_events"] = nbucket
+        for k in ("bins_refreshes", "repartitions"):
+            if hasattr(eng, k):
+                rec[k] = getattr(eng, k)
+
+        # per-rank time-averaged work imbalance of the decomposition (the
+        # repartition trigger's own metric, logged every cycle)
+        if hasattr(eng, "_assignment") and "depth" in stats:
+            try:
+                from ..core.decompose import bin_occupancy_imbalance
+                from ..sph.timebins import cell_bin_histogram
+                bins_h = np.asarray(eng.state.bins)
+                mask_h = np.asarray(eng.state.cells.mask)
+                obb = cell_bin_histogram(bins_h, mask_h,
+                                         int(stats["depth"]) + 1)
+                rec["bin_occupancy_imbalance"] = float(
+                    bin_occupancy_imbalance(eng._assignment, obb,
+                                            eng.nranks))
+            except Exception:       # diagnostics must never kill the run
+                pass
+
+        # ---- cost-model feedback summary
+        if hasattr(cm, "measured_vs_modelled"):
+            rec["cost_ratios"] = cm.measured_vs_modelled()
+            rec["observed_units"] = {k: cm.observed_units(k)
+                                     for k in cm.observed}
+
+        self._update_registry(rec)
+        if self.spec.metrics:
+            rec["metrics"] = self.registry.snapshot()
+            self.records.append(jsonify(rec))
+        self.cycle += 1
+        return rec
+
+    def _update_registry(self, rec: Dict[str, Any]) -> None:
+        reg = self.registry
+        tr = rec.get("transfers")
+        if tr:
+            reg.count("transfer_boundary_bytes",
+                      sum(tr["boundary_bytes"].values()))
+            reg.count("transfer_intra_bytes", sum(tr["intra_bytes"].values()))
+            reg.count("transfer_total_bytes", tr["total_bytes"])
+        if "total_compiles" in rec:
+            reg.count("compiles_total", rec["total_compiles"])
+        tp = rec.get("transport")
+        if tp:
+            reg.count("transport_host_bytes", tp.get("host_bytes", 0))
+            reg.count("transport_exchanges", tp.get("exchanges", 0))
+        if "halo_exported_slots" in rec:
+            reg.inc("halo_exported_slots", rec["halo_exported_slots"])
+            reg.inc("halo_full_slots", rec.get("halo_full_slots", 0))
+        if "bucket_events" in rec:
+            reg.count("bucket_events", rec["bucket_events"])
+        for k in ("bins_refreshes", "repartitions"):
+            if k in rec:
+                reg.count(k, rec[k])
+        reg.inc("cycles", 1)
+        reg.inc("updates", rec.get("updates", 0))
+        reg.inc("pair_tasks", rec.get("pair_tasks", 0))
+        for k in ("imbalance", "dead_frac", "bin_occupancy_imbalance"):
+            if k in rec:
+                reg.gauge(k, rec[k])
+        if "depth" in rec:
+            reg.gauge("depth", rec["depth"])
+
+    # -------------------------------------------------------------- export
+    def export_chrome_trace(self, path: str,
+                            process_name: str = "repro") -> Dict[str, Any]:
+        return write_chrome_trace(path, self.tracer.spans,
+                                  self.tracer.t_origin, process_name)
+
+    def write_metrics_jsonl(self, path: str) -> None:
+        write_metrics_jsonl(path, self.records)

@@ -8,6 +8,7 @@ engine classes (``Simulation``, ``TimeBinSimulation``,
 legacy shims.
 """
 
+from ..observability import ObserveSpec, RunObserver
 from .api import (SCENARIOS, SimulationSpec, build_simulation, make_ic,
                   register_scenario)
 from .api import Simulation as SimulationProtocol
@@ -31,7 +32,7 @@ from .collectives import (CollectiveTransport, build_allgather_program,
 
 __all__ = [
     "SCENARIOS", "SimulationSpec", "SimulationProtocol", "build_simulation",
-    "make_ic", "register_scenario",
+    "make_ic", "register_scenario", "ObserveSpec", "RunObserver",
     "GridSpec", "PairList", "ParticleCells", "bin_particles",
     "build_pair_list", "choose_grid", "unbin",
     "SPHConfig", "SPHState", "Simulation", "build_taskgraph", "cfl_timestep",

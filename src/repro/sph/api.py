@@ -48,6 +48,8 @@ from typing import Any, Callable, Dict, Mapping, Optional, Protocol, Tuple, \
 
 import numpy as np
 
+from ..observability.observer import ObserveSpec
+from ..observability.tracer import NULL_TRACER
 from .engine import SPHConfig
 
 
@@ -177,6 +179,12 @@ class SimulationSpec:
 
     # shared
     capacity_margin: float = 3.0
+    # observability: False (default, zero overhead), True (trace + metrics),
+    # an ObserveSpec, or a mapping of ObserveSpec fields. When enabled,
+    # build_simulation attaches a RunObserver whose tracer is wired through
+    # the engine and its transport; ``sim.observer`` exposes the collected
+    # trace/metrics and their export methods.
+    observe: Any = False
 
     def __post_init__(self):
         if self.integrator not in INTEGRATORS:
@@ -208,6 +216,17 @@ class SimulationSpec:
                 "residency='device' keeps rank states on the mesh and "
                 "fuses the exchange into the sub-step programs; it "
                 "requires transport='collective'")
+        ob = self.observe
+        if not isinstance(ob, ObserveSpec):
+            if isinstance(ob, bool):
+                ob = ObserveSpec(enabled=ob)
+            elif isinstance(ob, Mapping):
+                ob = ObserveSpec(enabled=True, **dict(ob))
+            else:
+                raise ValueError(
+                    f"observe must be a bool, an ObserveSpec or a mapping "
+                    f"of its fields, got {self.observe!r}")
+            object.__setattr__(self, "observe", ob)
 
     def with_(self, **changes) -> "SimulationSpec":
         """A copy with the given fields replaced (specs are frozen)."""
@@ -216,16 +235,43 @@ class SimulationSpec:
 
 # ------------------------------------------------------------------- adapters
 class _SimulationBase:
-    """Shared ``run`` / log plumbing of the quadrant adapters."""
+    """Shared ``run`` / log / observability plumbing of the adapters."""
 
     spec: SimulationSpec
+    observer = None               # RunObserver when spec.observe is enabled
+    _tracer = NULL_TRACER
 
     @property
     def time(self) -> float:
         raise NotImplementedError
 
-    def step(self) -> Dict[str, Any]:
+    def _step_impl(self) -> Dict[str, Any]:
         raise NotImplementedError
+
+    def step(self) -> Dict[str, Any]:
+        """Advance one step/cycle; closes the observer's cycle record."""
+        stats = self._step_impl()
+        if self.observer is not None:
+            self.observer.end_cycle(self, stats)
+        return stats
+
+    def _init_observer(self) -> None:
+        """Attach a RunObserver and wire its tracer through the engine
+        layers (called by :func:`build_simulation` once the engine
+        exists)."""
+        ospec = self.spec.observe
+        if not (isinstance(ospec, ObserveSpec) and ospec.enabled):
+            return
+        from ..observability.observer import RunObserver
+        self.observer = RunObserver(ospec)
+        tr = self.observer.tracer
+        self._tracer = tr
+        eng = getattr(self, "engine", None)
+        if eng is not None and hasattr(eng, "tracer"):
+            eng.tracer = tr
+        transport = getattr(eng, "_transport", None)
+        if transport is not None:
+            transport.tracer = tr
 
     def diagnostics(self) -> Tuple[float, np.ndarray]:
         raise NotImplementedError
@@ -270,17 +316,16 @@ class _LocalGlobal(_SimulationBase):
     def time(self) -> float:
         return float(self.engine.state.time)
 
-    def step(self) -> Dict[str, Any]:
-        import time as _time
-        t0 = _time.perf_counter()
-        if self.spec.dt is not None:
-            dt = float(self.spec.dt)
-        else:
-            from .engine import cfl_timestep
-            dt = float(cfl_timestep(self.engine.state, self.spec.physics))
-        self.engine.run(1, dt=dt)
-        return {"t": self.time, "dt": dt,
-                "wall": _time.perf_counter() - t0}
+    def _step_impl(self) -> Dict[str, Any]:
+        with self._tracer.timed("step") as sp:
+            if self.spec.dt is not None:
+                dt = float(self.spec.dt)
+            else:
+                from .engine import cfl_timestep
+                dt = float(cfl_timestep(self.engine.state,
+                                        self.spec.physics))
+            self.engine.run(1, dt=dt)
+        return {"t": self.time, "dt": dt, "wall": sp.elapsed}
 
     def diagnostics(self):
         return self.engine.diagnostics()
@@ -308,7 +353,7 @@ class _LocalTimeBin(_SimulationBase):
     def time(self) -> float:
         return float(self.engine.state.time)
 
-    def step(self) -> Dict[str, Any]:
+    def _step_impl(self) -> Dict[str, Any]:
         stats = self.engine.run_cycle()
         stats["dt"] = stats["dt_max"]
         return stats
@@ -368,14 +413,12 @@ class _DistGlobal(_SimulationBase):
                                  cfl=self.spec.physics.cfl)
         return float(jnp.min(dts))
 
-    def step(self) -> Dict[str, Any]:
-        import time as _time
-        t0 = _time.perf_counter()
-        dt = self._dt()
-        self.engine.step(dt)
-        self._time += dt
-        return {"t": self._time, "dt": dt,
-                "wall": _time.perf_counter() - t0}
+    def _step_impl(self) -> Dict[str, Any]:
+        with self._tracer.timed("step") as sp:
+            dt = self._dt()
+            self.engine.step(dt)
+            self._time += dt
+        return {"t": self._time, "dt": dt, "wall": sp.elapsed}
 
     def diagnostics(self):
         c = self.engine.gather_cells()
@@ -415,7 +458,7 @@ class _DistTimeBin(_SimulationBase):
     def time(self) -> float:
         return float(self.engine.state.time)
 
-    def step(self) -> Dict[str, Any]:
+    def _step_impl(self) -> Dict[str, Any]:
         stats = self.engine.run_cycle()
         stats["dt"] = stats["dt_max"]
         return stats
@@ -443,4 +486,6 @@ def build_simulation(spec: SimulationSpec,
     if ic is None:
         ic = make_ic(spec.scenario, **dict(spec.scenario_params))
     cls = _QUADRANTS[(spec.integrator, spec.backend)]
-    return cls(spec, ic)
+    sim = cls(spec, ic)
+    sim._init_observer()
+    return sim

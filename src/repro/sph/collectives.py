@@ -355,10 +355,13 @@ class CollectiveTransport(Transport):
 
     # ------------------------------------------------------------- exchange
     def exchange(self, slots: ShipSlots, fields: List[List],
-                 stream: str = "substep") -> List[List]:
+                 stream: str = "substep",
+                 label: Optional[str] = None) -> List[List]:
         if self._edges is None:
             raise RuntimeError("CollectiveTransport.exchange before "
                                "prepare(edges)")
+        tr = self.tracer
+        t0 = tr.now() if tr.enabled else 0.0
         nranks = self.nranks
         nrows = int(np.shape(fields[0][0])[0])
         meta = tuple((tuple(np.shape(f[0])[1:]),
@@ -373,6 +376,7 @@ class CollectiveTransport(Transport):
                 self.mesh, self.axis, self.rounds, nrows, B, len(fields)))
             outs = prog(jnp.asarray(pack), jnp.asarray(unpack),
                         jnp.asarray(valid), *stacked)
+            bkt = B
         else:
             Bo = self.buckets.fit(("ag_out", stream),
                                   slots.max_rank_exports(nranks))
@@ -384,6 +388,7 @@ class CollectiveTransport(Transport):
                 self.mesh, self.axis, nrows, Bo, Bi, len(fields)))
             outs = prog(jnp.asarray(pack), jnp.asarray(usrc),
                         jnp.asarray(urows), jnp.asarray(valid), *stacked)
+            bkt = max(Bo, Bi)
         self.exchanges += 1
         self.shipped_rows += slots.total
         # normalise placement: slicing a mesh-sharded output yields arrays
@@ -396,6 +401,13 @@ class CollectiveTransport(Transport):
         # (residency="device") removes; host_bytes measures it.
         outs_h = [np.asarray(out) for out in outs]
         self.host_bytes += 2 * sum(o.nbytes for o in outs_h)
+        if tr.enabled:
+            # outs_h materialisation above is the sync point: the whole
+            # collective (pack + wire + scatter) has completed by now, so
+            # the span covers the one program as a task on every rank's row
+            tr.record_all(range(nranks), label or "exchange", t0,
+                          stream=stream, mode=self.mode, bucket=bkt,
+                          units=slots.total, kind="collective", collective=1)
         return [[jnp.asarray(o[r]) for r in range(nranks)] for o in outs_h]
 
     def stats(self) -> Dict[str, object]:

@@ -503,17 +503,27 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
     # -------------------------------------------------------------- cycling
     def run_cycle(self) -> Dict[str, float]:
-        import time as _time
-        t0 = _time.perf_counter()
-        ctx = self._cycle_prologue()
-        if self.residency == "device":
-            body = self._cycle_substeps_device(ctx)
-        else:
-            body = self._cycle_substeps_host(ctx)
-        return self._cycle_epilogue(ctx, body, t0)
+        tr = self.tracer
+        if tr.enabled:
+            tr.ctx["cycle"] = self.cycle_index
+            tr.ctx.pop("substep", None)
+        with tr.timed("cycle") as cyc:
+            ctx = self._cycle_prologue()
+            if self.residency == "device":
+                body = self._cycle_substeps_device(ctx)
+            else:
+                body = self._cycle_substeps_host(ctx)
+            stats = self._cycle_epilogue(ctx, body)
+        if tr.enabled:
+            tr.ctx.pop("substep", None)
+        self.cycle_index += 1
+        stats["wall"] = cyc.elapsed
+        return stats
 
     def _cycle_prologue(self) -> Dict[str, object]:
         """Plan the cycle and open it on the global mirror (host side)."""
+        tr = self.tracer
+        t0 = tr.now() if tr.enabled else 0.0
         dt_max_c, depth = self._plan_cycle()
         nsub = 1 << depth
         nreal = int(np.asarray(self.state.cells.mask).sum())
@@ -526,21 +536,28 @@ class DistTimeBinSimulation(TimeBinSimulation):
         # opening half-kick on the global mirror, then scatter to ranks
         self.state = self._jit_start(self.state, jnp.float32(dt_max_c))
         plan = self._get_plan()
+        if tr.enabled:
+            tr.fence(self.state.cells.pos)
+            # planning runs once on the host for everyone — one task on
+            # every rank's row, like SWIFT's tree-build
+            tr.record_all(range(plan.nranks), "plan", t0, units=nreal,
+                          collective=1)
         return {"dt_max_c": dt_max_c, "depth": depth, "nsub": nsub,
                 "dt_min": dt_max_c / nsub, "nreal": nreal,
                 "bins_host": bins_host, "mask_host": mask_host,
                 "u_floor": u_floor, "hist": hist, "plan": plan}
 
     def _cycle_epilogue(self, ctx: Dict[str, object],
-                        body: Dict[str, int], t0: float) -> Dict[str, float]:
+                        body: Dict[str, int]) -> Dict[str, float]:
         """Close the cycle: repartition check, re-bin, counters, stats."""
-        import time as _time
+        tr = self.tracer
         nsub, nreal = ctx["nsub"], ctx["nreal"]
         self._maybe_repartition(np.asarray(self.state.bins),
                                 np.asarray(self.state.cells.mask),
                                 ctx["depth"])
         if self.rebin_each_cycle:
-            self._rebin_state()
+            with tr.span("rebin", units=nreal):
+                self._rebin_state()
         self.particle_updates += body["updates"]
         self.global_equiv_updates += nsub * nreal
         self.substeps += nsub
@@ -561,7 +578,6 @@ class DistTimeBinSimulation(TimeBinSimulation):
             "halo_full_slots": body["cycle_full"],
             "nranks": ctx["plan"].nranks,
             "residency": self.residency,
-            "wall": _time.perf_counter() - t0,
         }
 
     def _cycle_substeps_host(self, ctx: Dict[str, object]) -> Dict[str, int]:
@@ -572,7 +588,11 @@ class DistTimeBinSimulation(TimeBinSimulation):
         dt_max_c, dt_min = ctx["dt_max_c"], ctx["dt_min"]
         mask_host, u_floor = ctx["mask_host"], ctx["u_floor"]
         nreal = ctx["nreal"]
+        tr = self.tracer
+        t0 = tr.now() if tr.enabled else 0.0
         states = self._scatter_state(plan)
+        if tr.enabled:
+            tr.record_all(range(plan.nranks), "scatter", t0, collective=1)
 
         updates = 0
         pair_tasks = 0
@@ -616,29 +636,52 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
             dt_d = jnp.float32((n - drifted_to) * dt_min)
             drifted_to = n
+            if tr.enabled:
+                tr.ctx["substep"] = n
+                active_frac = float(active_p.sum()) / max(nreal, 1)
             subs, pair_bucket = self._rank_pair_subsets(plan, active_cells)
             self.program_keys.add(("density", level, pair_bucket))
             self.program_keys.add(("force", level, pair_bucket))
             phase1 = []
             for r in range(plan.nranks):
-                states[r] = self._jit_drift(states[r], dt_d)
+                with tr.span("drift", rank=r):
+                    states[r] = self._jit_drift(states[r], dt_d)
+                    if tr.enabled:
+                        tr.fence(states[r].cells.pos)
                 sub, pmask, nlive = subs[r]
-                act, rho, om, pr, cs = self._jit_sub_density(
-                    states[r], sub, pmask, jnp.int32(level), wake_ext(r))
+                d_attrs = {}
+                if tr.enabled:
+                    d_attrs = dict(level=level, units=nlive, pairs=nlive,
+                                   bucket=pair_bucket,
+                                   active_frac=active_frac)
+                with tr.span("density", rank=r, **d_attrs):
+                    act, rho, om, pr, cs = self._jit_sub_density(
+                        states[r], sub, pmask, jnp.int32(level), wake_ext(r))
+                    if tr.enabled:
+                        tr.fence(rho)
                 phase1.append([sub, pmask, nlive, act, rho, om, pr, cs])
             # exchange 1: owner's fresh rho/omega/press/cs -> replicas
             if slots:
                 fields = [[phase1[r][4 + f] for r in range(plan.nranks)]
                           for f in range(4)]
-                fields = self._transport.exchange(slots, fields)
+                fields = self._transport.exchange(slots, fields,
+                                                  label="exchange1")
                 for r in range(plan.nranks):
                     phase1[r][4:] = [fields[f][r] for f in range(4)]
             for r in range(plan.nranks):
                 sub, pmask, nlive, act, rho, om, pr, cs = phase1[r]
-                states[r], _ = self._jit_sub_force(
-                    states[r], sub, pmask, act, rho, om, pr, cs,
-                    wake_ext(r), jnp.float32(dt_max_c), jnp.int32(depth),
-                    jnp.float32(u_floor))
+                f_attrs = {}
+                if tr.enabled:
+                    f_attrs = dict(level=level, units=nlive, pairs=nlive,
+                                   bucket=pair_bucket,
+                                   active_frac=active_frac)
+                with tr.span("force", rank=r, **f_attrs):
+                    states[r], _ = self._jit_sub_force(
+                        states[r], sub, pmask, act, rho, om, pr, cs,
+                        wake_ext(r), jnp.float32(dt_max_c), jnp.int32(depth),
+                        jnp.float32(u_floor))
+                    if tr.enabled:
+                        tr.fence(states[r].cells.vel)
             # exchange 2: kicked state of shipped cells -> replicas
             if slots:
                 fields = [[getattr(states[r].cells, nm)
@@ -648,7 +691,7 @@ class DistTimeBinSimulation(TimeBinSimulation):
                             for r in range(plan.nranks)]
                            for nm in ("bins", "t_start", "accel", "dudt")]
                 vel, uu, bb, ts, ac, dd = self._transport.exchange(
-                    slots, fields)
+                    slots, fields, label="exchange2")
                 for r in range(plan.nranks):
                     states[r] = states[r]._replace(
                         cells=states[r].cells._replace(
@@ -679,14 +722,24 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
         # final sync sub-step: everyone active, full pair lists, full cut
         dt_d = jnp.float32((nsub - drifted_to) * dt_min)
+        if tr.enabled:
+            tr.ctx["substep"] = nsub
         subs, pair_bucket = self._rank_pair_subsets(plan, None)
         self.program_keys.add(("final_density", 0, pair_bucket))
         self.program_keys.add(("final_force", 0, pair_bucket))
         phase1 = []
         for r in range(plan.nranks):
-            states[r] = self._jit_drift(states[r], dt_d)
+            with tr.span("drift", rank=r):
+                states[r] = self._jit_drift(states[r], dt_d)
+                if tr.enabled:
+                    tr.fence(states[r].cells.pos)
             sub, pmask, nlive = subs[r]
-            rho, om, pr, cs = self._jit_final_density(states[r], sub, pmask)
+            with tr.span("density", rank=r, units=nlive, pairs=nlive,
+                         bucket=pair_bucket, active_frac=1.0):
+                rho, om, pr, cs = self._jit_final_density(states[r], sub,
+                                                          pmask)
+                if tr.enabled:
+                    tr.fence(rho)
             phase1.append([sub, pmask, nlive, rho, om, pr, cs])
         if plan.cut:
             ship = list(plan.cut.keys())
@@ -695,19 +748,27 @@ class DistTimeBinSimulation(TimeBinSimulation):
             cycle_full += plan.cut_slots
             fields = [[phase1[r][3 + f] for r in range(plan.nranks)]
                       for f in range(4)]
-            fields = self._transport.exchange(slots, fields, stream="final")
+            fields = self._transport.exchange(slots, fields, stream="final",
+                                              label="exchange_final")
             for r in range(plan.nranks):
                 phase1[r][3:] = [fields[f][r] for f in range(4)]
         for r in range(plan.nranks):
             sub, pmask, nlive, rho, om, pr, cs = phase1[r]
-            states[r] = self._jit_final_force(
-                states[r], sub, pmask, rho, om, pr, cs,
-                jnp.float32(dt_max_c))
+            with tr.span("force", rank=r, units=nlive, pairs=nlive,
+                         bucket=pair_bucket, active_frac=1.0):
+                states[r] = self._jit_final_force(
+                    states[r], sub, pmask, rho, om, pr, cs,
+                    jnp.float32(dt_max_c))
+                if tr.enabled:
+                    tr.fence(states[r].cells.vel)
         jax.block_until_ready(states[-1].cells.pos)
         updates += nreal
         pair_tasks += len(self._ci)
 
+        tg = tr.now() if tr.enabled else 0.0
         self._gather_state(plan, states)
+        if tr.enabled:
+            tr.record_all(range(plan.nranks), "gather", tg, collective=1)
         return {"updates": updates, "pair_tasks": pair_tasks,
                 "force_substeps": force_substeps,
                 "cycle_exported": cycle_exported,
@@ -889,7 +950,12 @@ class DistTimeBinSimulation(TimeBinSimulation):
         dt_max_c, dt_min = ctx["dt_max_c"], ctx["dt_min"]
         mask_host, u_floor = ctx["mask_host"], ctx["u_floor"]
         nreal = ctx["nreal"]
+        tr = self.tracer
+        t0 = tr.now() if tr.enabled else 0.0
         res = self._scatter_resident(plan)
+        if tr.enabled:
+            tr.fence(res["pos"])
+            tr.record_all(range(plan.nranks), "scatter", t0, collective=1)
 
         updates = 0
         pair_tasks = 0
@@ -960,13 +1026,28 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
             dt_d = (n - drifted_to) * dt_min
             drifted_to = n
+            if tr.enabled:
+                tr.ctx["substep"] = n
             self.program_keys.add(("fused_force", level, sig[3]))
             scalars = {"dt_drift": jnp.float32(dt_d),
                        "level": jnp.int32(level),
                        "dt_max": jnp.float32(dt_max_c),
                        "depth": jnp.int32(depth),
                        "u_floor": jnp.float32(u_floor)}
+            ts = tr.now() if tr.enabled else 0.0
             changed = run_fused(tables, sig, scalars, final=False)
+            if tr.enabled:
+                # the fused program is one task on every rank's row; fence
+                # so its device time lands inside this span, not the next
+                tr.fence(res["pos"])
+                tr.record_all(
+                    range(plan.nranks), "fused_substep", ts,
+                    level=level, bucket=sig[3],
+                    units=int((active_cells[self._ci]
+                               | active_cells[self._cj]).sum()),
+                    slots=slots.total,
+                    active_frac=float(active_p.sum()) / max(nreal, 1),
+                    collective=1)
             changed_h = np.asarray(changed)
             self.transfers.record("flags", changed_h.nbytes, boundary=False)
             if changed_h.any():
@@ -974,18 +1055,19 @@ class DistTimeBinSimulation(TimeBinSimulation):
                 # changed ranks only, then re-derive the wake floors —
                 # the lone mid-cycle state-array readback, counted per
                 # event by the transfer probe
-                for r in np.nonzero(changed_h)[0]:
-                    own = plan.owned[int(r)]
-                    if not len(own):
-                        continue
-                    row = res.pull("bins", boundary=False, index=int(r))
-                    bins_h[own] = row[:len(own)]
-                self.bins_refreshes += 1
-                table_cache.clear()             # invalidate the level plans
-                new_floor = self._wake_floor(bins_h, mask_host)
-                if not np.array_equal(new_floor, wake_floor):
-                    wake_floor = new_floor
-                    wake_stacked = None         # invalidate on wake-up
+                with tr.span("bins_refresh"):
+                    for r in np.nonzero(changed_h)[0]:
+                        own = plan.owned[int(r)]
+                        if not len(own):
+                            continue
+                        row = res.pull("bins", boundary=False, index=int(r))
+                        bins_h[own] = row[:len(own)]
+                    self.bins_refreshes += 1
+                    table_cache.clear()         # invalidate the level plans
+                    new_floor = self._wake_floor(bins_h, mask_host)
+                    if not np.array_equal(new_floor, wake_floor):
+                        wake_floor = new_floor
+                        wake_stacked = None     # invalidate on wake-up
             updates += int(active_p.sum())
             pair_tasks += int((active_cells[self._ci]
                                | active_cells[self._cj]).sum())
@@ -1000,15 +1082,26 @@ class DistTimeBinSimulation(TimeBinSimulation):
         tables, sig = self._fused_tables(plan, None, slots, "fused_final",
                                          None)
         self.program_keys.add(("fused_final", 0, sig[3]))
+        if tr.enabled:
+            tr.ctx["substep"] = nsub
         scalars = {"dt_drift": jnp.float32(dt_d), "level": jnp.int32(0),
                    "dt_max": jnp.float32(dt_max_c),
                    "depth": jnp.int32(depth),
                    "u_floor": jnp.float32(u_floor)}
+        ts = tr.now() if tr.enabled else 0.0
         run_fused(tables, sig, scalars, final=True)
+        if tr.enabled:
+            tr.fence(res["pos"])
+            tr.record_all(range(plan.nranks), "fused_final", ts,
+                          level=0, bucket=sig[3], units=len(self._ci),
+                          slots=slots.total, active_frac=1.0, collective=1)
         updates += nreal
         pair_tasks += len(self._ci)
 
+        tg = tr.now() if tr.enabled else 0.0
         self._gather_resident(plan, res)
+        if tr.enabled:
+            tr.record_all(range(plan.nranks), "gather", tg, collective=1)
         return {"updates": updates, "pair_tasks": pair_tasks,
                 "force_substeps": force_substeps,
                 "cycle_exported": cycle_exported,

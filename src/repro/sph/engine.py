@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import CostModel, TaskGraph
+from ..observability.tracer import NULL_TRACER
 from .cellgrid import GridSpec, PairList, ParticleCells, bin_particles, \
     build_pair_list, choose_grid, unbin
 from .physics import GAMMA, DensityResult, ForceResult, cfl_timestep_block, \
@@ -327,6 +328,7 @@ class Simulation:
             functools.partial(step, box=self.box, cfg=self.cfg))
         self.state = init_state(self.cells, self.pairs, self.cfg)
         self._steps_since_rebin = 0
+        self.tracer = NULL_TRACER      # rebound when observe=True
 
     def _rebin(self, pos, vel, mass, u, h):
         self.cells, self.perm = bin_particles(self.spec, pos, vel, mass, u, h)
@@ -337,17 +339,18 @@ class Simulation:
         self.pairs = build_pair_list(self.spec)
 
     def run(self, nsteps: int, dt: Optional[float] = None) -> Dict[str, list]:
-        import time as _time
         log: Dict[str, list] = {"t": [], "wall": [], "E": [], "px": []}
         for _ in range(nsteps):
             dt_step = dt if dt is not None else float(
                 cfl_timestep(self.state, self.cfg))
-            t0 = _time.perf_counter()
-            self.state = self._jit_step(self.state, self.pairs,
-                                        jnp.asarray(dt_step,
-                                                    self.cells.pos.dtype))
-            jax.block_until_ready(self.state.cells.pos)
-            wall = _time.perf_counter() - t0
+            with self.tracer.timed("engine_step",
+                                   pairs=int(self.pairs.ci.shape[0])) as sp:
+                self.state = self._jit_step(self.state, self.pairs,
+                                            jnp.asarray(
+                                                dt_step,
+                                                self.cells.pos.dtype))
+                jax.block_until_ready(self.state.cells.pos)
+            wall = sp.elapsed
             self._steps_since_rebin += 1
             if self._steps_since_rebin >= self.rebin_every:
                 flat = unbin(self.state.cells, self.perm, self.n)

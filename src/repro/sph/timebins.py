@@ -37,6 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..observability.tracer import NULL_TRACER
 from .cellgrid import GridSpec, PairList, ParticleCells, bin_particles, \
     build_pair_list, choose_grid, unbin
 from .engine import SPHConfig, _density_pass, _force_pass
@@ -451,6 +452,8 @@ class TimeBinSimulation:
         self.particle_updates = 0       # force evaluations actually received
         self.global_equiv_updates = 0   # what global-dt would have performed
         self.substeps = 0
+        self.tracer = NULL_TRACER       # rebound when observe=True
+        self.cycle_index = 0
 
     # ------------------------------------------------------------- plumbing
     def _rebin(self, pos, vel, mass, u, h):
@@ -586,9 +589,21 @@ class TimeBinSimulation:
 
     def run_cycle(self) -> Dict[str, float]:
         """One dt_max cycle of the KDK ladder; returns cycle stats."""
-        import time as _time
-        t0 = _time.perf_counter()
-        dt_max_c, depth = self._plan_cycle()
+        tr = self.tracer
+        if tr.enabled:
+            tr.ctx["cycle"] = self.cycle_index
+            tr.ctx.pop("substep", None)
+        with tr.timed("cycle") as cyc:
+            stats = self._run_cycle_body(tr)
+        if tr.enabled:
+            tr.ctx.pop("substep", None)
+        self.cycle_index += 1
+        stats["wall"] = cyc.elapsed
+        return stats
+
+    def _run_cycle_body(self, tr) -> Dict[str, float]:
+        with tr.span("plan"):
+            dt_max_c, depth = self._plan_cycle()
         nsub = 1 << depth
         dt_min = dt_max_c / nsub
         nreal = int(np.asarray(self.state.cells.mask).sum())
@@ -600,7 +615,10 @@ class TimeBinSimulation:
         hist = np.bincount(bins_host[mask_host > 0],
                            minlength=depth + 1)
 
-        state = self._jit_start(self.state, jnp.float32(dt_max_c))
+        with tr.span("start", units=nreal):
+            state = self._jit_start(self.state, jnp.float32(dt_max_c))
+            if tr.enabled:
+                tr.fence(state.cells.pos)
         updates = 0
         pair_tasks = 0
         force_substeps = 0
@@ -614,17 +632,30 @@ class TimeBinSimulation:
                         | (bins_h < wake_floor[:, None])) & (mask_host > 0)
             if not active_p.any():
                 continue            # headroom level with nothing due
+            if tr.enabled:
+                tr.ctx["substep"] = n
             # lazily apply the accumulated drift up to time t0 + n·dt_min
-            state = self._jit_drift(state,
-                                    jnp.float32((n - drifted_to) * dt_min))
+            with tr.span("drift", units=nreal):
+                state = self._jit_drift(
+                    state, jnp.float32((n - drifted_to) * dt_min))
+                if tr.enabled:
+                    tr.fence(state.cells.pos)
             drifted_to = n
             sub, pmask, nlive = self._pair_subset(active_p.any(axis=1))
-            state, nact = self._jit_sub(state, sub, pmask,
-                                        jnp.int32(level),
-                                        jnp.asarray(wake_floor),
-                                        jnp.float32(dt_max_c),
-                                        jnp.int32(depth),
-                                        jnp.float32(u_floor))
+            sub_attrs = {}
+            if tr.enabled:
+                sub_attrs = dict(level=level, units=nlive, pairs=nlive,
+                                 active_frac=float(active_p.sum())
+                                 / max(nreal, 1))
+            with tr.span("substep", **sub_attrs):
+                state, nact = self._jit_sub(state, sub, pmask,
+                                            jnp.int32(level),
+                                            jnp.asarray(wake_floor),
+                                            jnp.float32(dt_max_c),
+                                            jnp.int32(depth),
+                                            jnp.float32(u_floor))
+                if tr.enabled:
+                    tr.fence(state.cells.pos)
             updates += int(nact)
             pair_tasks += nlive
             force_substeps += 1
@@ -634,17 +665,25 @@ class TimeBinSimulation:
             if not np.array_equal(bins_new, bins_h):
                 bins_h = bins_new
                 wake_floor = self._wake_floor(bins_h, mask_host)
-        state = self._jit_drift(state,
-                                jnp.float32((nsub - drifted_to) * dt_min))
-        state = self._jit_final(state, self.pairs,
-                                jnp.ones(len(self._ci), jnp.float32),
-                                jnp.float32(dt_max_c))
-        jax.block_until_ready(state.cells.pos)
+        if tr.enabled:
+            tr.ctx["substep"] = nsub
+        with tr.span("drift", units=nreal):
+            state = self._jit_drift(
+                state, jnp.float32((nsub - drifted_to) * dt_min))
+            if tr.enabled:
+                tr.fence(state.cells.pos)
+        with tr.span("final", units=len(self._ci), pairs=len(self._ci),
+                     active_frac=1.0):
+            state = self._jit_final(state, self.pairs,
+                                    jnp.ones(len(self._ci), jnp.float32),
+                                    jnp.float32(dt_max_c))
+            jax.block_until_ready(state.cells.pos)
         updates += nreal
         pair_tasks += len(self._ci)
         self.state = state
         if self.rebin_each_cycle:
-            self._rebin_state()
+            with tr.span("rebin", units=nreal):
+                self._rebin_state()
         self.particle_updates += updates
         self.global_equiv_updates += nsub * nreal
         self.substeps += nsub
@@ -659,7 +698,6 @@ class TimeBinSimulation:
             "global_equiv_updates": nsub * nreal,
             "pair_tasks": pair_tasks,
             "global_equiv_pair_tasks": nsub * len(self._ci),
-            "wall": _time.perf_counter() - t0,
         }
 
     def run(self, ncycles: int) -> Dict[str, list]:

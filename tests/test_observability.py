@@ -1,0 +1,296 @@
+"""Observability contract: tracing is free, faithful, and non-invasive.
+
+Three claims pinned here, mirroring the conformance harness's discipline:
+
+* **non-interference** — ``observe=True`` changes no number: traced runs
+  are bitwise-identical to untraced runs (the fences only *wait*, they
+  never reorder or recompute), and mint zero extra compiled programs.
+* **fidelity** — the exported Chrome trace passes the schema validator,
+  carries one row per rank with per-phase slices, and the per-cycle JSONL
+  counters agree *exactly* (not approximately) with the engines' live
+  ``TransferProbe``/``CompileProbe`` ledgers.
+* **cost** — an enabled span costs < 5 µs median on CPU, and the
+  ``CompileProbe`` fallback counts signatures instead of reporting ``-1``.
+"""
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.observability import (METRICS_SCHEMA_VERSION, NULL_TRACER,
+                                 ObserveSpec, Tracer, UMBRELLA_SPANS,
+                                 chrome_trace, jsonify, read_metrics_jsonl,
+                                 validate_chrome_trace, write_metrics_jsonl)
+from repro.sph import SimulationSpec, SPHConfig, build_simulation
+
+from test_conformance import (SCENARIOS, _assert_bitwise, _reference,
+                              _timebin_spec, _trajectory)
+
+
+# ----------------------------------------------------------- tracer basics
+def test_span_records_attrs_and_ctx():
+    tr = Tracer()
+    tr.ctx["cycle"] = 3
+    with tr.span("density", rank=1, units=64):
+        pass
+    tr.ctx.pop("cycle")
+    with tr.span("force", rank=0):
+        pass
+    spans = tr.spans
+    assert [s.name for s in spans] == ["density", "force"]
+    assert spans[0].rank == 1 and spans[0].attrs["units"] == 64
+    assert spans[0].attrs["cycle"] == 3          # ambient ctx merged in
+    assert (spans[1].attrs or {}).get("cycle") is None   # only while set
+    assert all(s.t1 >= s.t0 for s in spans)
+    assert tr.ranks() == [0, 1]
+
+
+def test_record_all_duplicates_collective_interval():
+    tr = Tracer()
+    t0 = tr.now()
+    tr.record_all(range(3), "exchange1", t0, units=10, collective=1)
+    spans = tr.spans
+    assert [s.rank for s in spans] == [0, 1, 2]
+    assert len({(s.t0, s.t1) for s in spans}) == 1   # same interval per rank
+    assert all(s.attrs["collective"] == 1 for s in spans)
+
+
+def test_null_tracer_is_inert_but_timed_measures():
+    assert not NULL_TRACER.enabled
+    with NULL_TRACER.span("x", rank=0):
+        pass
+    NULL_TRACER.record_all(range(4), "y", 0.0)
+    assert NULL_TRACER.fence("payload") == "payload"
+    with NULL_TRACER.timed("wall") as sp:
+        time.sleep(0.001)
+    assert sp.elapsed >= 0.001                    # "wall" stats still work
+    assert NULL_TRACER.spans == []
+
+
+def test_enabled_span_overhead_under_5us():
+    tr = Tracer()
+    n = 2000
+    samples = []
+    for _ in range(15):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with tr.span("bench", rank=0):
+                pass
+        samples.append((time.perf_counter() - t0) / n)
+        tr.clear()
+    samples.sort()
+    assert samples[len(samples) // 2] < 5e-6, samples
+
+
+# ------------------------------------------------------- chrome trace sink
+def _toy_tracer() -> Tracer:
+    tr = Tracer()
+    for r in (0, 1):
+        with tr.span("density", rank=r, units=8):
+            pass
+        with tr.span("force", rank=r):
+            pass
+    tr.record_all(range(2), "exchange1", tr.now(), collective=1)
+    return tr
+
+
+def test_chrome_trace_schema_valid_and_ordered():
+    doc = chrome_trace(_toy_tracer().spans, process_name="toy")
+    assert validate_chrome_trace(doc) == []
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert [e["ts"] for e in xs] == sorted(e["ts"] for e in xs)
+    assert {e["tid"] for e in xs} == {0, 1}
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert any(m["name"] == "thread_name" for m in metas)
+
+
+def test_chrome_trace_validator_catches_tampering():
+    doc = chrome_trace(_toy_tracer().spans)
+    bad = json.loads(json.dumps(doc))
+    bad["traceEvents"][-1]["dur"] = -1.0
+    assert validate_chrome_trace(bad)
+    bad = json.loads(json.dumps(doc))
+    xs = [e for e in bad["traceEvents"] if e["ph"] == "X"]
+    xs[0]["ts"], xs[-1]["ts"] = xs[-1]["ts"], xs[0]["ts"]
+    assert validate_chrome_trace(bad)
+    bad = json.loads(json.dumps(doc))
+    bad["traceEvents"] = [e for e in bad["traceEvents"]
+                          if e.get("name") != "thread_name"]
+    assert validate_chrome_trace(bad)             # rank mapping lost
+
+
+# ------------------------------------------------- spec coercion / wiring
+def test_observe_spec_coercion():
+    assert SimulationSpec().observe == ObserveSpec(enabled=False)
+    assert SimulationSpec(observe=True).observe.enabled
+    ospec = SimulationSpec(observe={"trace": False}).observe
+    assert ospec.enabled and not ospec.trace and ospec.metrics
+    with pytest.raises(ValueError, match="observe"):
+        SimulationSpec(observe=3.14)
+
+
+@pytest.mark.parametrize("integrator,backend", [
+    ("global", "local"), ("timebin", "local"),
+    ("global", "distributed"), ("timebin", "distributed")])
+def test_every_quadrant_reports_wall_and_observes(integrator, backend):
+    kw = dict(SCENARIOS["sedov"])
+    kw.update(integrator=integrator, backend=backend, dt=0.004,
+              observe=True)
+    if backend == "distributed":
+        kw.update(ranks=1)
+    sim = build_simulation(SimulationSpec(**kw))
+    stats = sim.step()
+    assert stats["wall"] > 0.0
+    assert sim.observer is not None
+    rec = sim.observer.records[-1]
+    assert rec["cycle"] == 0 and rec["wall"] == stats["wall"]
+    assert sim.observer.tracer.spans          # something was traced
+
+
+# ------------------------------------------------ bitwise non-interference
+@pytest.mark.slow
+@pytest.mark.parametrize("transport,residency",
+                         [("host", "host"), ("collective", "device")])
+def test_tracing_is_bitwise_invisible(transport, residency):
+    """observe=True vs observe=False: identical trajectories, the fences
+    only wait on values the untraced run computes anyway."""
+    spec = _timebin_spec("sedov", backend="distributed", ranks=1,
+                         transport=transport, residency=residency,
+                         observe=True)
+    got = _trajectory(build_simulation(spec))
+    _assert_bitwise(got, _reference("sedov"),
+                    f"traced/{transport}/{residency}")
+
+
+@pytest.mark.slow
+def test_tracing_is_bitwise_invisible_local_timebin():
+    spec = _timebin_spec("sedov", observe=True)
+    got = _trajectory(build_simulation(spec))
+    _assert_bitwise(got, _reference("sedov"), "traced/local-timebin")
+
+
+@pytest.mark.slow
+def test_tracing_mints_no_extra_programs():
+    base = _timebin_spec("sedov", backend="distributed", ranks=1,
+                         transport="collective", residency="device")
+    plain = build_simulation(base)
+    traced = build_simulation(_timebin_spec(
+        "sedov", backend="distributed", ranks=1, transport="collective",
+        residency="device", observe=True))
+    for _ in range(2):
+        plain.step()
+        traced.step()
+    assert traced.engine.probe.total_compiles() \
+        == plain.engine.probe.total_compiles()
+    assert traced.engine.probe.counts() == plain.engine.probe.counts()
+
+
+# -------------------------------------------- ledger fidelity + sinks e2e
+@pytest.mark.slow
+def test_metrics_record_agrees_exactly_with_probes(tmp_path):
+    spec = _timebin_spec("sedov", backend="distributed", ranks=1,
+                         transport="collective", residency="device",
+                         observe=True)
+    sim = build_simulation(spec)
+    for _ in range(2):
+        sim.step()
+    obs, eng = sim.observer, sim.engine
+    rec = obs.records[-1]
+    assert rec["compiles"] == jsonify(eng.probe.counts())
+    assert rec["total_compiles"] == eng.probe.total_compiles()
+    assert rec["transfers"] == jsonify(eng.transfers.stats())
+    assert rec["schema"] == METRICS_SCHEMA_VERSION
+
+    trace_path = tmp_path / "trace.json"
+    metrics_path = tmp_path / "metrics.jsonl"
+    doc = obs.export_chrome_trace(str(trace_path))
+    obs.write_metrics_jsonl(str(metrics_path))
+    assert validate_chrome_trace(doc) == []
+    assert validate_chrome_trace(json.loads(trace_path.read_text())) == []
+    back = read_metrics_jsonl(str(metrics_path))
+    assert len(back) == 2
+    assert back[-1]["transfers"] == rec["transfers"]
+    assert back[-1]["total_compiles"] == rec["total_compiles"]
+    # every force sub-step shows up as a fused-program slice on the row
+    xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    nsub = sum(r["force_substeps"] for r in obs.records)
+    fused = [e for e in xs
+             if e["name"] in ("fused_substep", "fused_final")]
+    assert len(fused) >= nsub
+    # cost feedback reached the engine's model
+    assert obs.records[-1]["cost_ratios"]
+    assert any(v > 0 for v in obs.records[-1]["observed_units"].values())
+
+
+# --------------------------------------------------- compile-probe fallback
+def test_compile_probe_counts_signatures_not_minus_one():
+    from repro.distributed.transport import CompileProbe
+    probe = CompileProbe()
+    with pytest.warns(RuntimeWarning, match="no jit cache"):
+        fn = probe.register("plain", lambda x: x + 1)
+    assert probe.counts() == {"plain": 0}
+    fn(np.zeros(3, np.float32))
+    fn(np.zeros(3, np.float32))                   # same signature: no growth
+    assert probe.counts() == {"plain": 1}
+    fn(np.zeros(4, np.float32))                   # new shape: new "compile"
+    fn(np.zeros(3, np.float64))                   # new dtype: new "compile"
+    assert probe.counts() == {"plain": 3}
+    assert probe.total_compiles() == 3
+    assert all(c >= 0 for c in probe.counts().values())
+
+
+def test_compile_probe_keeps_jit_cache_when_present():
+    import jax
+    from repro.distributed.transport import CompileProbe
+    probe = CompileProbe()
+    fn = probe.register("jitted", jax.jit(lambda x: x * 2))
+    fn(np.zeros(3, np.float32))
+    assert probe.counts()["jitted"] == 1
+
+
+# ------------------------------------------------------ cost-model feedback
+def test_cost_model_observe_and_ratio():
+    cm = CostModel(rates={"density": 2e-9})
+    assert cm.observed_units("density") == 0.0
+    assert cm.observed_rate("density") is None
+    cm.observe("density", units=1000.0, seconds=4e-6)      # 4e-9 s/unit
+    cm.observe("density", units=1000.0, seconds=4e-6)
+    assert cm.observed_units("density") == 2000.0
+    assert cm.observed_seconds("density") == pytest.approx(8e-6)
+    assert cm.observed_rate("density") == pytest.approx(4e-9)
+    ratios = cm.measured_vs_modelled()
+    # measured twice the modelled baseline rate, baseline frozen pre-EMA
+    assert ratios["density"] == pytest.approx(2.0)
+    assert cm.modelled_baseline["density"] == pytest.approx(2e-9)
+    assert cm.rates["density"] > 2e-9              # EMA pulled toward measured
+
+
+# ------------------------------------------------------------- report CLI
+def test_trace_report_renders_timeline_and_tables(tmp_path):
+    from repro.analysis.report import (metrics_summary, render_timeline,
+                                       trace_report)
+    doc = chrome_trace(_toy_tracer().spans)
+    text = render_timeline(doc, width=40)
+    assert "rank   0" in text and "rank   1" in text
+    assert "legend:" in text and "D=density" in text
+    assert all(n not in UMBRELLA_SPANS
+               for n in ("density", "force", "exchange1"))
+
+    records = [{"cycle": 0, "wall": 0.5, "imbalance": 1.25,
+                "dead_frac": 0.1, "updates": 216, "total_compiles": 3},
+               {"cycle": 1, "wall": 0.4, "imbalance": None,
+                "dead_frac": None, "updates": 216,
+                "cost_ratios": {"density": 1.5},
+                "observed_units": {"density": 4000.0}}]
+    table = metrics_summary(records)
+    assert "1.250" in table and "measured vs modelled" in table
+
+    trace_path = tmp_path / "trace.json"
+    trace_path.write_text(json.dumps(doc))
+    metrics_path = tmp_path / "metrics.jsonl"
+    write_metrics_jsonl(str(metrics_path), records)
+    out = trace_report(str(trace_path), str(metrics_path), width=40)
+    assert "task timeline" in out and "per-cycle summary" in out
