@@ -1,0 +1,154 @@
+"""Fleet serving throughput: N batched requests vs N single runs.
+
+The subsystem's reason to exist, measured: ≥64 concurrent small Sedov /
+Kelvin–Helmholtz requests (heterogeneous in values, two signatures in
+shape) served by :class:`repro.fleet.FleetRunner` as signature-grouped
+stacked programs — against the baseline of running each request through
+the single-simulation path back to back. Reported:
+
+* aggregate per-particle throughput (particle-steps / second) for both
+  strategies and the speed-up ratio;
+* compile counts (the fleet's whole pitch: two signatures × one batch
+  bucket ≈ 4 entry points for 64 requests, vs the baseline's per-signature
+  engine programs);
+* admission → completion latency distribution across the fleet.
+
+On a multi-device process (``XLA_FLAGS=--xla_force_host_platform_
+device_count=4``) the fleet axis shards across the mesh; on one device it
+is pure vmap. Either way the numbers land in ``BENCH_fleet.json`` at the
+repo root with ``_env`` provenance.
+
+Run:  PYTHONPATH=src python benchmarks/fleet_throughput.py [requests] [steps]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+try:                                    # runnable as module or script
+    from .common import emit
+except ImportError:                     # pragma: no cover
+    from common import emit
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _specs(n_requests: int, n_side: int, rebin_every: int):
+    from repro.sph import SimulationSpec
+    specs = []
+    for i in range(n_requests):
+        if i % 2 == 0:
+            specs.append(SimulationSpec(
+                scenario="sedov", rebin_every=rebin_every,
+                scenario_params={"n_side": n_side, "seed": i,
+                                 "e0": 1.0 + 0.05 * (i % 8)}))
+        else:
+            specs.append(SimulationSpec(
+                scenario="kelvin_helmholtz", rebin_every=rebin_every,
+                scenario_params={"n_side": n_side, "seed": i,
+                                 "v_shear": 0.3 + 0.02 * (i % 8)}))
+    return specs
+
+
+def run(n_requests: int = 64, n_steps: int = 8, n_side: int = 4) -> list:
+    import jax
+    from repro.fleet import FleetRunner, sequential_reference
+
+    specs = _specs(n_requests, n_side, rebin_every=n_steps)
+    n_particles = sum(
+        (dict(s.scenario_params)["n_side"] ** 3) for s in specs)
+    work = n_particles * n_steps                  # particle-steps total
+
+    # ----------------------------------------------------------- batched
+    runner = FleetRunner()
+    t0 = time.perf_counter()
+    reqs = [runner.submit(s, n_steps=n_steps) for s in specs]
+    runner.drain()
+    wall_fleet = time.perf_counter() - t0
+    bad = [r for r in reqs if r.result is None]
+    if bad:
+        raise RuntimeError(f"{len(bad)} fleet requests failed: "
+                           f"{bad[0].error!r}")
+    latencies = np.array([r.latency for r in reqs])
+    fleet_compiles = runner.probe.total_compiles()
+
+    # ----------------------------------------- baseline: one run at a time
+    t0 = time.perf_counter()
+    for s in specs:
+        sequential_reference(s, n_steps)
+    wall_seq = time.perf_counter() - t0
+
+    tput_fleet = work / wall_fleet
+    tput_seq = work / wall_seq
+    speedup = wall_seq / wall_fleet
+
+    rows = [
+        {"name": "fleet/throughput/particle_steps_per_s",
+         "us_per_call": round(wall_fleet / n_requests * 1e6, 1),
+         "derived": f"tput={tput_fleet:.0f}/s;requests={n_requests};"
+                    f"steps={n_steps}"},
+        {"name": "fleet/baseline/particle_steps_per_s",
+         "us_per_call": round(wall_seq / n_requests * 1e6, 1),
+         "derived": f"tput={tput_seq:.0f}/s"},
+        {"name": "fleet/speedup_vs_sequential",
+         "us_per_call": round(speedup, 3),
+         "derived": f"compiles={fleet_compiles};"
+                    f"entry_points={len(runner.programs.keys)};"
+                    f"devices={runner.fleet_devices}"},
+        {"name": "fleet/latency/p50_ms",
+         "us_per_call": round(float(np.percentile(latencies, 50)) * 1e3, 2),
+         "derived": f"p95={np.percentile(latencies, 95) * 1e3:.1f}ms"},
+    ]
+    emit(rows, "fleet_throughput")
+
+    bench = {
+        "benchmark": "fleet_throughput",
+        "requests": n_requests,
+        "steps": n_steps,
+        "n_side": n_side,
+        "particles_total": n_particles,
+        "particle_steps": work,
+        "signatures": len({s.signature_key() for s in specs}),
+        "fleet": {
+            "wall_s": wall_fleet,
+            "particle_steps_per_s": tput_fleet,
+            "compiles": fleet_compiles,
+            "entry_points": len(runner.programs.keys),
+            "batches": runner.batches_run,
+            "buckets": {str(k): v for k, v
+                        in runner.batcher.policy._bucket.items()},
+            "fleet_devices": runner.fleet_devices,
+            "latency_ms": {
+                "p50": float(np.percentile(latencies, 50)) * 1e3,
+                "p95": float(np.percentile(latencies, 95)) * 1e3,
+                "max": float(latencies.max()) * 1e3},
+            "pool": runner.pool.stats(),
+        },
+        "sequential": {
+            "wall_s": wall_seq,
+            "particle_steps_per_s": tput_seq,
+        },
+        "speedup": speedup,
+        "_env": {
+            "python": sys.version.split()[0],
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        },
+    }
+    with open(os.path.join(ROOT, "BENCH_fleet.json"), "w") as f:
+        json.dump(bench, f, indent=1, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    n_requests = int(sys.argv[1]) if len(sys.argv) > 1 else 64
+    n_steps = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+    run(n_requests=n_requests, n_steps=n_steps)

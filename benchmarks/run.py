@@ -83,6 +83,7 @@ def main() -> None:
         ("halo_transport (host vs collective vs fused wire)",
          "halo_transport"),
         ("observability (task plots)", "observability_bench"),
+        ("fleet_throughput (batched serving)", "fleet_throughput"),
     ]
     summary = {}
     failures = []

@@ -2,6 +2,12 @@
 continuous-batching-style slot manager (finished sequences are replaced by
 queued requests between decode steps).
 
+**Legacy (LM-zoo era).** The repo's serving path is now the simulation
+fleet — ``PYTHONPATH=src python -m repro.fleet --scenario sedov
+--requests 64`` — which applies the same continuous-batching idea to whole
+simulation requests (see ``examples/fleet_serve.py``). This example stays
+as a model-zoo exercise.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 

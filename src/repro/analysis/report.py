@@ -163,6 +163,14 @@ def render_timeline(doc: Dict, width: int = 72) -> str:
                 used.add(ch)
                 break
     rows = sorted({e["tid"] for e in xs})
+    # row labels come from the trace's thread_name metadata when present
+    # (fleet traces name rows by request_id; rank traces by "rank N")
+    row_names = {e.get("tid"): str(e.get("args", {}).get("name"))
+                 for e in doc.get("traceEvents", [])
+                 if isinstance(e, dict) and e.get("ph") == "M"
+                 and e.get("name") == "thread_name"
+                 and e.get("args", {}).get("name")}
+    label_w = max([8] + [len(v) for v in row_names.values()])
     lines = [f"task timeline: {span / 1e6:.4f} s over {width} buckets "
              f"('.' = dead time)"]
     bw = span / width
@@ -179,7 +187,8 @@ def render_timeline(doc: Dict, width: int = 72) -> str:
                 cover[b][e["name"]] = cover[b].get(e["name"], 0.0) + ov
         line = "".join(chars[max(c, key=c.get)] if c else "."
                        for c in cover)
-        lines.append(f"rank {r:>3} |{line}|")
+        label = row_names.get(r, f"rank {r:>3}")
+        lines.append(f"{label:>{label_w}} |{line}|")
     legend = "  ".join(f"{c}={n}"
                        for n, c in sorted(chars.items(), key=lambda kv: kv[1]))
     lines.append(f"legend: {legend}")

@@ -1,0 +1,48 @@
+"""Fleet execution: serve many simulations as one batched mesh program.
+
+The serving subsystem (ISSUE: "fleet"): a request stream of frozen
+:class:`~repro.sph.api.SimulationSpec` s is admitted by
+:class:`~repro.fleet.queue.RequestQueue`, grouped by compiled-program
+signature (:mod:`repro.fleet.signature`) into no-shrink batch buckets
+(:mod:`repro.fleet.batcher`), and each batch is dispatched by
+:class:`~repro.fleet.runner.FleetRunner` as ONE stacked program — vmapped
+over a fleet axis, sharded across the device mesh when one is present.
+
+``python -m repro.fleet --scenario sedov --requests 64`` is the serving
+entry point (it replaces the LM-zoo era ``repro.launch.serve``).
+
+Import discipline: :mod:`repro.sph.api` lazily imports
+:mod:`repro.fleet.signature` (spec canonicalisation + signatures), and
+:mod:`repro.fleet.queue` imports the spec back — so this package must not
+eagerly import its queue/batcher/runner modules. They load on attribute
+access.
+"""
+
+from __future__ import annotations
+
+from . import signature as signature                       # cycle-free
+from .signature import SHAPE_PARAM_KEYS, signature_key, split_scenario_params
+
+_LAZY = {
+    "RequestQueue": "queue",
+    "FleetRequest": "queue",
+    "FleetResult": "queue",
+    "RequestState": "queue",
+    "AdmissionError": "queue",
+    "SignatureBatcher": "batcher",
+    "Batch": "batcher",
+    "FleetRunner": "runner",
+    "TransferBufferPool": "runner",
+    "sequential_reference": "runner",
+}
+
+__all__ = ["SHAPE_PARAM_KEYS", "signature", "signature_key",
+           "split_scenario_params", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

@@ -1,5 +1,11 @@
 """Serving driver: batched prefill + decode loop.
 
+.. deprecated:: **Legacy (LM-zoo era).** Still runnable, but the repo's
+   serving entry point is now the simulation fleet:
+   ``PYTHONPATH=src python -m repro.fleet --scenario sedov --requests 64``
+   (see :mod:`repro.fleet`). This LM driver stays as an exercise of the
+   model zoo only.
+
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
         --batch 4 --prompt-len 32 --new-tokens 32
 """

@@ -53,19 +53,25 @@ def jsonify(obj: Any) -> Any:
 
 # ------------------------------------------------------------- chrome trace
 def chrome_trace(spans: Sequence[Span], t_origin: float = 0.0,
-                 process_name: str = "repro") -> Dict[str, Any]:
+                 process_name: str = "repro",
+                 row_names: Dict[int, str] = None) -> Dict[str, Any]:
     """Spans → a Chrome-trace document: per-rank rows, per-phase slices.
 
     ``ts``/``dur`` are microseconds since ``t_origin`` (the tracer's run
     anchor), so one run's ranks share a timeline in the Perfetto view.
+    ``row_names`` overrides the default ``rank {r}`` row labels — the
+    fleet serving trace names each row by its ``request_id`` so a
+    multi-request timeline reads per user, not per rank.
     """
     ranks = sorted({s.rank for s in spans})
     events: List[Dict[str, Any]] = [{
         "ph": "M", "name": "process_name", "pid": TRACE_PID, "tid": 0,
         "args": {"name": process_name}}]
+    row_names = row_names or {}
     for r in ranks:
         events.append({"ph": "M", "name": "thread_name", "pid": TRACE_PID,
-                       "tid": r, "args": {"name": f"rank {r}"}})
+                       "tid": r,
+                       "args": {"name": row_names.get(r, f"rank {r}")}})
         # ranks sort by index, not lexically, in the viewer
         events.append({"ph": "M", "name": "thread_sort_index",
                        "pid": TRACE_PID, "tid": r,
@@ -83,8 +89,9 @@ def chrome_trace(spans: Sequence[Span], t_origin: float = 0.0,
 
 def write_chrome_trace(path: str, spans: Sequence[Span],
                        t_origin: float = 0.0,
-                       process_name: str = "repro") -> Dict[str, Any]:
-    doc = chrome_trace(spans, t_origin, process_name)
+                       process_name: str = "repro",
+                       row_names: Dict[int, str] = None) -> Dict[str, Any]:
+    doc = chrome_trace(spans, t_origin, process_name, row_names=row_names)
     with open(path, "w") as f:
         json.dump(doc, f)
     return doc

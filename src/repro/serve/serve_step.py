@@ -1,4 +1,12 @@
-"""Serving: prefill and decode steps over the zoo's cache structures."""
+"""Serving: prefill and decode steps over the zoo's cache structures.
+
+.. deprecated:: **Legacy (LM-zoo era).** Kept importable for the language-
+   model examples, but this is no longer the repo's serving path. The
+   simulation-serving subsystem lives in :mod:`repro.fleet`
+   (``python -m repro.fleet --scenario sedov --requests 64``), which batches
+   *simulation requests* by compiled-program signature the way this module
+   batched decode slots.
+"""
 
 from __future__ import annotations
 

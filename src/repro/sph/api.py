@@ -101,6 +101,52 @@ def _register_builtin_scenarios():
 _register_builtin_scenarios()
 
 
+class FrozenParams(Mapping):
+    """Canonical immutable mapping for ``SimulationSpec.scenario_params``.
+
+    ``SimulationSpec`` is frozen and hash-grouped by the fleet layer, but a
+    plain dict field breaks that contract twice: dicts are unhashable, and
+    two semantically identical specs built with different insertion orders
+    would compare/hash through whatever ``dataclass`` does with the field
+    object. This wrapper stores the items **sorted by key** with values
+    canonicalised to hashable forms (nested dicts/lists included), so
+    ``hash(spec)`` and ``spec.program_signature()`` depend only on content.
+    It still quacks like the mapping the scenario factories expect
+    (``dict(spec.scenario_params)`` / ``**spec.scenario_params``).
+    """
+
+    __slots__ = ("_items", "_dict")
+
+    def __init__(self, mapping: Mapping[str, Any] = ()):
+        from ..fleet.signature import canonical
+        items = tuple(sorted((str(k), canonical(v))
+                             for k, v in dict(mapping).items()))
+        object.__setattr__(self, "_items", items)
+        object.__setattr__(self, "_dict", dict(items))
+
+    def __getitem__(self, key):
+        return self._dict[key]
+
+    def __iter__(self):
+        return iter(self._dict)
+
+    def __len__(self):
+        return len(self._dict)
+
+    def __hash__(self):
+        return hash(self._items)
+
+    def __eq__(self, other):
+        if isinstance(other, FrozenParams):
+            return self._items == other._items
+        if isinstance(other, Mapping):
+            return self._items == FrozenParams(other)._items
+        return NotImplemented
+
+    def __repr__(self):
+        return f"FrozenParams({self._dict!r})"
+
+
 # -------------------------------------------------------------------- protocol
 @runtime_checkable
 class Simulation(Protocol):
@@ -187,6 +233,12 @@ class SimulationSpec:
     observe: Any = False
 
     def __post_init__(self):
+        # canonicalise the mapping field: sorted, immutable, hashable —
+        # two specs differing only in dict insertion order are one spec
+        # (and one fleet signature group). See FrozenParams.
+        if not isinstance(self.scenario_params, FrozenParams):
+            object.__setattr__(self, "scenario_params",
+                               FrozenParams(self.scenario_params))
         if self.integrator not in INTEGRATORS:
             raise ValueError(
                 f"integrator must be one of {INTEGRATORS}, "
@@ -231,6 +283,21 @@ class SimulationSpec:
     def with_(self, **changes) -> "SimulationSpec":
         """A copy with the given fields replaced (specs are frozen)."""
         return dataclasses.replace(self, **changes)
+
+    def program_signature(self) -> tuple:
+        """The compiled-program signature this spec maps to: quadrant ×
+        engine policy × physics × scenario *shape* (value-only scenario
+        params excluded, so e.g. two Sedov requests differing only in
+        ``e0`` share a signature and can batch). See
+        :mod:`repro.fleet.signature`."""
+        from ..fleet.signature import signature
+        return signature(self)
+
+    def signature_key(self) -> str:
+        """Short stable digest of :meth:`program_signature` (logs, cache
+        keys, trace attrs)."""
+        from ..fleet.signature import signature_key
+        return signature_key(self)
 
 
 # ------------------------------------------------------------------- adapters

@@ -196,6 +196,16 @@ def cfl_timestep(state: SPHState, cfg: SPHConfig) -> jax.Array:
     return jnp.min(cfl_timestep_particles(state, cfg))
 
 
+@functools.lru_cache(maxsize=None)
+def shared_step_program(box: float, cfg: SPHConfig):
+    """One jitted step program per (box, physics config), shared by every
+    :class:`Simulation` instance. A per-instance ``jax.jit(partial(...))``
+    gives each engine its own jit cache, so a fleet of same-signature
+    requests would recompile the identical program once per request; the
+    memo makes N engines of one signature cost one compile."""
+    return jax.jit(functools.partial(step, box=box, cfg=cfg))
+
+
 # -------------------------------------------------------------- task graph
 def build_taskgraph(spec: GridSpec, pairs: PairList,
                     occupancy: np.ndarray,
@@ -324,8 +334,7 @@ class Simulation:
                                 capacity_margin=capacity_margin)
         self._rebin(np.asarray(pos), np.asarray(vel), np.asarray(mass),
                     np.asarray(u), np.asarray(h))
-        self._jit_step = jax.jit(
-            functools.partial(step, box=self.box, cfg=self.cfg))
+        self._jit_step = shared_step_program(self.box, self.cfg)
         self.state = init_state(self.cells, self.pairs, self.cfg)
         self._steps_since_rebin = 0
         self.tracer = NULL_TRACER      # rebound when observe=True

@@ -396,6 +396,21 @@ def _force_final(state: TimeBinState, pairs: PairList, pair_mask, dt_max,
                               cs, dt_max, cfg=cfg)
 
 
+@functools.lru_cache(maxsize=None)
+def shared_timebin_programs(box: float, cfg: SPHConfig) -> Dict[str, object]:
+    """The five jitted ladder programs per (box, physics config), shared by
+    every :class:`TimeBinSimulation` instance (same rationale as
+    ``engine.shared_step_program``: a fleet of same-signature requests must
+    compile the ladder once, not once per request)."""
+    return {
+        "init": jax.jit(functools.partial(timebin_init, cfg=cfg)),
+        "start": jax.jit(functools.partial(_cycle_start, cfg=cfg)),
+        "drift": jax.jit(functools.partial(_drift, box=box)),
+        "sub": jax.jit(functools.partial(_force_substep, cfg=cfg)),
+        "final": jax.jit(functools.partial(_force_final, cfg=cfg)),
+    }
+
+
 # ------------------------------------------------------------------- driver
 class TimeBinSimulation:
     """Host driver of the sub-step hierarchy (multi-dt ``Simulation``).
@@ -437,11 +452,12 @@ class TimeBinSimulation:
                                 capacity_margin=capacity_margin)
         self._rebin(np.asarray(pos), np.asarray(vel), np.asarray(mass),
                     np.asarray(u), np.asarray(h))
-        self._jit_init = jax.jit(functools.partial(timebin_init, cfg=cfg))
-        self._jit_start = jax.jit(functools.partial(_cycle_start, cfg=cfg))
-        self._jit_drift = jax.jit(functools.partial(_drift, box=self.box))
-        self._jit_sub = jax.jit(functools.partial(_force_substep, cfg=cfg))
-        self._jit_final = jax.jit(functools.partial(_force_final, cfg=cfg))
+        progs = shared_timebin_programs(self.box, cfg)
+        self._jit_init = progs["init"]
+        self._jit_start = progs["start"]
+        self._jit_drift = progs["drift"]
+        self._jit_sub = progs["sub"]
+        self._jit_final = progs["final"]
         # Cycle planning uses the signal-velocity CFL (see _signal_speeds);
         # the κ·u/|du/dt| heating guard applies only in mid-cycle deepening
         # (where it catches a shock front arriving at cold gas) — applying

@@ -274,7 +274,9 @@ def test_trace_report_renders_timeline_and_tables(tmp_path):
                                        trace_report)
     doc = chrome_trace(_toy_tracer().spans)
     text = render_timeline(doc, width=40)
-    assert "rank   0" in text and "rank   1" in text
+    # row labels come from the trace's thread_name metadata ("rank N"
+    # for rank traces, request ids for fleet traces)
+    assert "rank 0 |" in text and "rank 1 |" in text
     assert "legend:" in text and "D=density" in text
     assert all(n not in UMBRELLA_SPANS
                for n in ("density", "force", "exchange1"))
