@@ -64,6 +64,7 @@ for s in spans:
         continue
     per.setdefault(s.name, []).append(s.dur * 1e6)
 rec = sim.observer.records[-1]
+tstats = sim.engine.transfers.stats()
 out = {
     "phases": {k: {"median_us": float(np.median(v)), "count": len(v)}
                for k, v in sorted(per.items())},
@@ -71,6 +72,11 @@ out = {
     "dead_frac": rec.get("dead_frac"),
     "total_compiles": rec.get("total_compiles"),
     "force_substeps": rec.get("force_substeps"),
+    "device_imbalance": rec.get("device_imbalance"),
+    "device_phase_units": rec.get("device_phase_units"),
+    "metrics_pulls": tstats["boundary_events"].get("metrics", 0),
+    "metrics_pull_bytes": tstats["boundary_bytes"].get("metrics", 0),
+    "cycles_total": %(warm)d + %(ncycles)d,
     "backend": jax.default_backend(),
     "device_count": jax.device_count(),
     "jax": jax.__version__,
@@ -125,6 +131,21 @@ def run(n_side=6, ncycles=3, nranks=4, warm=2) -> list:
         "us_per_call": round(res.get("imbalance") or 0.0, 4),
         "derived": f"dead_frac={res.get('dead_frac'):.4f};"
                    f"total_compiles={res.get('total_compiles')}"})
+    # device telemetry pull cost: the contract is ONE host<->device
+    # transfer per cycle, regardless of rank count or phase count
+    cyc = res.get("cycles_total") or (ncycles + warm)
+    pulls = res.get("metrics_pulls", 0)
+    pulls_per_cycle = pulls / cyc if cyc else 0.0
+    rows.append({
+        "name": "observability/device_metrics/pulls_per_cycle",
+        "us_per_call": round(pulls_per_cycle, 3),
+        "derived": f"pulls={pulls};cycles={cyc};"
+                   f"bytes={res.get('metrics_pull_bytes', 0)};"
+                   f"device_imbalance={res.get('device_imbalance')}"})
+    if pulls_per_cycle > 1.0:
+        raise RuntimeError(
+            f"device-metrics pull cost exceeds one transfer per cycle: "
+            f"{pulls} pulls over {cyc} cycles")
     emit(rows, "observability_bench")
 
     from repro.observability import METRICS_SCHEMA_VERSION
@@ -146,6 +167,14 @@ def run(n_side=6, ncycles=3, nranks=4, warm=2) -> list:
         "imbalance": res.get("imbalance"),
         "dead_frac": res.get("dead_frac"),
         "total_compiles": res.get("total_compiles"),
+        "device_metrics": {
+            "pulls": pulls,
+            "cycles": cyc,
+            "pulls_per_cycle": pulls_per_cycle,
+            "pull_bytes": res.get("metrics_pull_bytes", 0),
+            "device_imbalance": res.get("device_imbalance"),
+            "device_phase_units": res.get("device_phase_units"),
+        },
     }
     with open(os.path.join(ROOT, "BENCH_observability.json"), "w") as f:
         json.dump(bench, f, indent=1, default=str)

@@ -192,26 +192,62 @@ def render_timeline(doc: Dict, width: int = 72) -> str:
     legend = "  ".join(f"{c}={n}"
                        for n, c in sorted(chars.items(), key=lambda kv: kv[1]))
     lines.append(f"legend: {legend}")
+    # dead lanes must be loud: every expired-sweep marker called out by
+    # request, not left as a zero-width slice nobody notices
+    expired = [e for e in xs if e.get("name") == "expired"]
+    if expired:
+        lines.append(f"EXPIRED lanes ({len(expired)}):")
+        for e in expired:
+            a = e.get("args", {})
+            who = a.get("request_id", row_names.get(e.get("tid"),
+                                                    f"row {e.get('tid')}"))
+            lines.append(f"  {who}: deadline={a.get('deadline')} "
+                         f"({a.get('error', 'expired before scheduling')})")
     return "\n".join(lines)
 
 
 def metrics_summary(records: List[Dict]) -> str:
-    """Per-cycle imbalance/dead-time table + measured-vs-modelled costs."""
+    """Per-cycle imbalance/dead-time table + measured-vs-modelled costs.
+
+    Accepts schema-v1 (PR 5) and v2 records alike: every record is
+    normalised through ``upgrade_record``, so the device-metrics columns
+    render as '-' for logs that predate them."""
     if not records:
         return "(no metrics records)"
+    from ..observability import upgrade_record
+    records = [upgrade_record(r) for r in records]
     lines = ["per-cycle summary:",
              f"{'cycle':>5} {'wall (s)':>10} {'imbalance':>10} "
+             f"{'dev_imb':>8} {'health':>7} "
              f"{'dead_frac':>10} {'updates':>10} {'compiles':>9}"]
     for r in records:
         imb = r.get("imbalance")
         dead = r.get("dead_frac")
+        dimb = r.get("device_imbalance")
+        health = r.get("health")
+        if health is None:
+            hcol = "-"
+        else:
+            hcol = "TRIP" if health.get("tripped") else "ok"
         lines.append(
             f"{r.get('cycle', 0):>5} {r.get('wall', 0.0):>10.4f} "
             f"{'-' if imb is None else format(imb, '.3f'):>10} "
+            f"{'-' if dimb is None else format(dimb, '.3f'):>8} "
+            f"{hcol:>7} "
             f"{'-' if dead is None else format(dead, '.3f'):>10} "
             f"{r.get('updates', 0):>10} "
             f"{str(r.get('total_compiles', '-')):>9}")
     last = records[-1]
+    du = last.get("device_phase_units")
+    if du:
+        lines += ["", "device-measured work units (last cycle, in-program "
+                      "telemetry):",
+                  "  " + "  ".join(f"{k}={v:.4g}"
+                                   for k, v in sorted(du.items()))]
+    dumps = [r["flight_dump"] for r in records if r.get("flight_dump")]
+    if dumps:
+        lines += ["", "flight-recorder dumps (sentinel trips):"]
+        lines += [f"  {d}" for d in dumps]
     ratios = last.get("cost_ratios") or {}
     if ratios:
         units = last.get("observed_units") or {}

@@ -225,12 +225,13 @@ class TransferProbe:
         self.boundary_bytes: Dict[str, int] = {}
         self.intra_bytes: Dict[str, int] = {}
         self.intra_events: Dict[str, int] = {}
+        self.boundary_events: Dict[str, int] = {}
 
     def record(self, fname: str, nbytes: int, *, boundary: bool) -> None:
         book = self.boundary_bytes if boundary else self.intra_bytes
         book[fname] = book.get(fname, 0) + int(nbytes)
-        if not boundary:
-            self.intra_events[fname] = self.intra_events.get(fname, 0) + 1
+        events = self.boundary_events if boundary else self.intra_events
+        events[fname] = events.get(fname, 0) + 1
 
     def intra_state_bytes(
             self, fields: Sequence[str] = DYNAMIC_STATE_FIELDS) -> int:
@@ -243,6 +244,7 @@ class TransferProbe:
 
     def stats(self) -> Dict[str, object]:
         return {"boundary_bytes": dict(self.boundary_bytes),
+                "boundary_events": dict(self.boundary_events),
                 "intra_bytes": dict(self.intra_bytes),
                 "intra_state_bytes": self.intra_state_bytes(),
                 "total_bytes": self.total_bytes()}

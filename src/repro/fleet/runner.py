@@ -181,7 +181,8 @@ class FleetRunner:
     """Request-driven serving loop over signature-grouped batches."""
 
     def __init__(self, *, max_batch: int = 64, max_inflight: int = 1024,
-                 fleet_devices: Optional[int] = None, observe: bool = False):
+                 fleet_devices: Optional[int] = None, observe: bool = False,
+                 flight_dir: Optional[str] = None):
         import jax
         if fleet_devices is None:
             ndev = len(jax.devices())
@@ -199,6 +200,13 @@ class FleetRunner:
         self.batches_run = 0
         self.sequential_runs = 0
         self.particle_steps = 0         # Σ particles × steps actually served
+        # per-request terminal-status counter: every request the runner
+        # retires lands here exactly once (done/failed/expired) — the
+        # metric that makes dead lanes visible, not just absent
+        self.terminal_status: Dict[str, int] = {}
+        # where expired-sweep post-mortem bundles go (None = no dumps)
+        self.flight_dir = flight_dir
+        self.flight_dumps: List[str] = []
 
     # ----------------------------------------------------------- frontend
     def submit(self, spec: SimulationSpec, *, n_steps: int = 1,
@@ -212,16 +220,50 @@ class FleetRunner:
         return req
 
     def drain(self) -> List[FleetRequest]:
-        """Serve until the queue is empty; returns the finished requests."""
+        """Serve until the queue is empty; returns the finished requests.
+
+        The deadline sweep runs *visibly*: expired requests get a terminal
+        status count, a zero-length ``expired`` span on their own timeline
+        row, and (when ``flight_dir`` is set) a post-mortem bundle — a
+        dead lane must show up in the metrics, not just go missing."""
         served: List[FleetRequest] = []
         while True:
+            self._sweep_expired(self.queue.expire())
             ready = self.queue.take_ready()
             if not ready:
                 break
             for batch in self.batcher.form(ready):
                 self._run_batch(batch)
                 served.extend(batch.requests)
+                for r in batch.requests:
+                    self._count_terminal(r)
         return served
+
+    def _count_terminal(self, req: FleetRequest) -> None:
+        key = req.state.value
+        self.terminal_status[key] = self.terminal_status.get(key, 0) + 1
+
+    def _sweep_expired(self, expired: List[FleetRequest]) -> None:
+        if not expired:
+            return
+        tr = self.tracer
+        now = tr.now() if tr.enabled else 0.0
+        for r in expired:
+            self._count_terminal(r)
+            if tr.enabled:
+                tr.record("expired", r.row, now, now,
+                          request_id=r.request_id, deadline=r.deadline,
+                          error=str(r.error))
+        if self.flight_dir is not None:
+            from ..observability.flight import FlightRecorder
+            path = FlightRecorder().dump(
+                self.flight_dir,
+                reason=f"expired-{expired[0].request_id}",
+                cycle=self.batches_run,
+                spans=self.tracer.spans[-256:],
+                row_names=self.row_names,
+                extra={"expired": [r.request_id for r in expired]})
+            self.flight_dumps.append(path)
 
     # ---------------------------------------------------------- dispatch
     def _run_batch(self, batch: Batch) -> None:
@@ -510,6 +552,8 @@ class FleetRunner:
 
     def stats(self) -> Dict[str, Any]:
         return {"queue": self.queue.stats(),
+                "terminal_status": dict(self.terminal_status),
+                "flight_dumps": list(self.flight_dumps),
                 "batches": self.batches_run,
                 "sequential_runs": self.sequential_runs,
                 "particle_steps": self.particle_steps,

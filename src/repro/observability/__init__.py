@@ -18,26 +18,38 @@ SWIFT, arXiv:2305.13380). This package is that loop for the XLA substrate:
 * :mod:`~repro.observability.observer` — the per-run merge point wired in
   by ``SimulationSpec(observe=True)``; feeds measured task costs back into
   :class:`~repro.core.cost_model.CostModel`.
+* :mod:`~repro.observability.device_metrics` — the in-program telemetry
+  carry (fixed-shape per-rank counter/value rows computed *inside* the
+  fused programs, accumulated on device, pulled once per cycle).
+* :mod:`~repro.observability.flight` — last-K-cycles flight recorder +
+  post-mortem dump bundles, written on any health-sentinel trip.
 
 ``python -m repro.observability`` runs one traced Sedov cycle on an
 emulated rank mesh and exports + validates ``trace.json`` /
-``metrics.jsonl`` (the CI artifact job).
+``metrics.jsonl`` (the CI artifact job); ``python -m repro.observability
+dump`` produces and validates a flight-recorder bundle (optionally
+tripping the NaN sentinel on purpose).
 
 This package must stay importable before jax is configured (its CLI sets
 ``XLA_FLAGS``), so nothing here imports jax at module scope.
 """
 
+from .device_metrics import (COUNT_COLUMNS, VALUE_COLUMNS,
+                             DEVICE_METRICS_VERSION)
+from .flight import FlightRecorder, read_bundle, validate_bundle
 from .metrics import METRICS_SCHEMA_VERSION, MetricsRegistry
 from .observer import ObserveSpec, RunObserver, UMBRELLA_SPANS
 from .sinks import (chrome_trace, jsonify, read_metrics_jsonl,
-                    validate_chrome_trace, write_chrome_trace,
-                    write_metrics_jsonl)
+                    upgrade_record, validate_chrome_trace,
+                    write_chrome_trace, write_metrics_jsonl)
 from .tracer import NULL_TRACER, NullTracer, Span, Tracer
 
 __all__ = [
     "METRICS_SCHEMA_VERSION", "MetricsRegistry",
+    "COUNT_COLUMNS", "VALUE_COLUMNS", "DEVICE_METRICS_VERSION",
+    "FlightRecorder", "read_bundle", "validate_bundle",
     "ObserveSpec", "RunObserver", "UMBRELLA_SPANS",
-    "chrome_trace", "jsonify", "read_metrics_jsonl",
+    "chrome_trace", "jsonify", "read_metrics_jsonl", "upgrade_record",
     "validate_chrome_trace", "write_chrome_trace", "write_metrics_jsonl",
     "NULL_TRACER", "NullTracer", "Span", "Tracer",
 ]

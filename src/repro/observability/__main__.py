@@ -9,8 +9,19 @@ runs the time-bin × distributed engine (collective transport,
 device-resident by default) with tracing on, exports the Chrome trace and
 the per-cycle metrics log, validates the trace against the minimal schema,
 and asserts the record's byte/compile counters agree exactly with the
-engine's ``TransferProbe``/``CompileProbe``. Exit status 0 means every
-check passed.
+engine's ``TransferProbe``/``CompileProbe``. With device metrics enabled
+(the default) it additionally checks the in-program telemetry row: per-rank
+per-phase work present, exactly one ledgered ``metrics`` pull per cycle.
+Exit status 0 means every check passed.
+
+The ``dump`` subcommand exercises the flight recorder end-to-end:
+
+    python -m repro.observability dump --inject-nan --out-dir flight-dumps
+
+runs the same scenario, optionally corrupts one velocity component with a
+NaN mid-run (tripping the NaN sentinel), and validates the post-mortem
+bundle that results. ``dump --validate PATH`` just validates an existing
+bundle.
 
 Must run before jax is imported elsewhere: it sets ``XLA_FLAGS`` to emulate
 the requested rank count when the environment hasn't already.
@@ -22,6 +33,27 @@ import argparse
 import json
 import os
 import sys
+
+
+def _ensure_devices(ranks: int) -> None:
+    if "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{ranks}").strip()
+
+
+def _spec(args):
+    from repro.sph import SimulationSpec, SPHConfig
+    return SimulationSpec(
+        scenario="sedov",
+        scenario_params={"n_side": args.n_side, "e0": 1.0, "seed": 0},
+        physics=SPHConfig(alpha_visc=1.0, cfl=0.15),
+        integrator="timebin", backend="distributed", ranks=args.ranks,
+        dt_max=0.02, max_depth=4,
+        transport=args.transport, residency=args.residency,
+        observe={"flight_dir": args.out_dir})
 
 
 def main(argv=None) -> int:
@@ -36,26 +68,21 @@ def main(argv=None) -> int:
     ap.add_argument("--transport", default="collective",
                     choices=("host", "collective"))
     ap.add_argument("--n-side", type=int, default=6)
+    ap.add_argument("--no-device-metrics", action="store_true",
+                    help="disable the per-cycle telemetry pull (the row is "
+                         "still computed in-program)")
     args = ap.parse_args(argv)
 
-    if args.transport == "collective" and "jax" not in sys.modules:
-        flags = os.environ.get("XLA_FLAGS", "")
-        if "host_platform_device_count" not in flags:
-            os.environ["XLA_FLAGS"] = (
-                f"{flags} --xla_force_host_platform_device_count="
-                f"{args.ranks}").strip()
+    if args.transport == "collective":
+        _ensure_devices(args.ranks)
 
-    from repro.sph import SimulationSpec, SPHConfig, build_simulation
+    from repro.sph import build_simulation
     from repro.observability import jsonify, validate_chrome_trace
 
-    spec = SimulationSpec(
-        scenario="sedov",
-        scenario_params={"n_side": args.n_side, "e0": 1.0, "seed": 0},
-        physics=SPHConfig(alpha_visc=1.0, cfl=0.15),
-        integrator="timebin", backend="distributed", ranks=args.ranks,
-        dt_max=0.02, max_depth=4,
-        transport=args.transport, residency=args.residency,
-        observe=True)
+    spec = _spec(args)
+    if args.no_device_metrics:
+        spec = spec.with_(observe={"device_metrics": False,
+                                   "flight_dir": args.out_dir})
     sim = build_simulation(spec)
     for _ in range(args.cycles):
         sim.step()
@@ -99,11 +126,37 @@ def main(argv=None) -> int:
         failures.append(f"transfer ledger diverged: {rec['transfers']} != "
                         f"{eng.transfers.stats()}")
 
+    # device metrics: in-program per-rank rows, one ledgered pull per cycle
+    if not args.no_device_metrics:
+        dmx = rec.get("device_metrics")
+        if not dmx:
+            failures.append("no device_metrics in the cycle record")
+        else:
+            if len(dmx["per_rank_work"]) != args.ranks:
+                failures.append(
+                    f"device per_rank_work has "
+                    f"{len(dmx['per_rank_work'])} rows != {args.ranks}")
+            if not all(w > 0 for w in dmx["per_rank_work"]):
+                failures.append(f"device per-rank work not all positive: "
+                                f"{dmx['per_rank_work']}")
+            if rec.get("device_imbalance") is None \
+                    and sum(dmx["per_rank_work"]) > 0:
+                failures.append("device_imbalance missing")
+            if "health" not in rec:
+                failures.append("health block missing")
+        pulls = eng.transfers.stats()["boundary_events"].get("metrics", 0)
+        if pulls != args.cycles:
+            failures.append(f"{pulls} ledgered metrics pulls != "
+                            f"{args.cycles} cycles (pull-once contract)")
+
     summary = {
         "ranks": args.ranks, "cycles": args.cycles,
         "residency": args.residency, "spans": len(xs),
         "force_substeps": nsub,
         "imbalance": rec.get("imbalance"),
+        "device_imbalance": rec.get("device_imbalance"),
+        "device_phase_units": rec.get("device_phase_units"),
+        "health": rec.get("health"),
         "dead_frac": rec.get("dead_frac"),
         "bin_occupancy_imbalance": rec.get("bin_occupancy_imbalance"),
         "total_compiles": rec.get("total_compiles"),
@@ -118,5 +171,83 @@ def main(argv=None) -> int:
     return 0
 
 
+def dump_main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.observability dump",
+        description="produce (and validate) a flight-recorder post-mortem "
+                    "bundle; --inject-nan trips the NaN sentinel on purpose")
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--cycles", type=int, default=2)
+    ap.add_argument("--out-dir", default="flight-dumps")
+    ap.add_argument("--residency", default="device",
+                    choices=("host", "device"))
+    ap.add_argument("--transport", default="collective",
+                    choices=("host", "collective"))
+    ap.add_argument("--n-side", type=int, default=6)
+    ap.add_argument("--inject-nan", action="store_true",
+                    help="corrupt one velocity component before the last "
+                         "cycle so the NaN sentinel trips")
+    ap.add_argument("--validate", metavar="PATH",
+                    help="only validate an existing bundle directory")
+    args = ap.parse_args(argv)
+
+    from repro.observability.flight import validate_bundle
+
+    if args.validate:
+        manifest = validate_bundle(args.validate)
+        print(json.dumps({"bundle": args.validate,
+                          "manifest": manifest, "ok": True}, indent=1))
+        return 0
+
+    if args.transport == "collective":
+        _ensure_devices(args.ranks)
+
+    import numpy as np
+    from repro.sph import build_simulation
+    from repro.observability import jsonify
+
+    sim = build_simulation(_spec(args))
+    eng = sim.engine
+    for n in range(args.cycles):
+        if args.inject_nan and n == args.cycles - 1:
+            # poison one alive particle's velocity on the global mirror —
+            # the next cycle's scatter carries it onto the mesh and the
+            # in-program sentinel must catch it
+            cells = eng.state.cells
+            vel = np.asarray(cells.vel).copy()
+            alive = np.argwhere(np.asarray(cells.mask) > 0)
+            c, p = alive[0]
+            vel[c, p, 0] = np.nan
+            import jax.numpy as jnp
+            eng.state = eng.state._replace(
+                cells=cells._replace(vel=jnp.asarray(vel)))
+        sim.step()
+    obs = sim.observer
+
+    dumps = list(obs.flight.dumps)
+    if not dumps:
+        # no sentinel tripped (healthy run without --inject-nan): dump the
+        # ring explicitly so the bundle path is exercised either way
+        dumps = [obs.dump_flight(reason="manual")]
+
+    out = []
+    for path in dumps:
+        manifest = validate_bundle(path)
+        out.append({"bundle": path, "reason": manifest["reason"],
+                    "cycle": manifest["cycle"],
+                    "records": manifest["records"]})
+    tripped = bool(obs.records and obs.records[-1]
+                   .get("health", {}).get("tripped"))
+    print(json.dumps(jsonify({"dumps": out, "tripped": tripped,
+                              "ok": True}), indent=1))
+    if args.inject_nan and not tripped:
+        print("FAIL: NaN injected but no sentinel tripped", file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    raise SystemExit(main())
+    _argv = sys.argv[1:]
+    if _argv and _argv[0] == "dump":
+        raise SystemExit(dump_main(_argv[1:]))
+    raise SystemExit(main(_argv))

@@ -25,7 +25,15 @@ from __future__ import annotations
 from typing import Dict
 
 # bump when metric record field names / meanings change
-METRICS_SCHEMA_VERSION = 1
+# v1 (PR 5): phase aggregates + verbatim engine ledgers
+# v2 (PR 7): adds the device-metrics block pulled from inside the
+#     compiled programs — ``device_metrics`` (named per-rank
+#     counts/values columns), ``device_phase_units``,
+#     ``device_imbalance``, ``health`` (sentinel flags + energy drift),
+#     and ``flight_dump`` on a sentinel trip. v1 readers that ignore
+#     unknown fields keep working; ``analysis/report.py`` upgrades v1
+#     records on read (``upgrade_record``).
+METRICS_SCHEMA_VERSION = 2
 
 
 class MetricsRegistry:

@@ -24,12 +24,16 @@ The record layout (one JSONL line per cycle) is versioned by
 
 from __future__ import annotations
 
+import os
+from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
 from ..core.cost_model import CostModel
+from . import device_metrics as dm
+from .flight import DEFAULT_RING, FlightRecorder
 from .metrics import METRICS_SCHEMA_VERSION, MetricsRegistry
 from .sinks import jsonify, write_chrome_trace, write_metrics_jsonl
 from .tracer import NULL_TRACER, Tracer
@@ -49,10 +53,26 @@ _STAT_KEYS = ("t", "dt_max", "dt", "depth", "substeps", "force_substeps",
 class ObserveSpec:
     """What to observe. ``SimulationSpec(observe=True)`` coerces to the
     all-on default; ``observe=ObserveSpec(enabled=True, trace=False)``
-    keeps the metrics log without span recording/fencing."""
+    keeps the metrics log without span recording/fencing.
+
+    ``device_metrics`` pulls the engines' in-program telemetry row once
+    per cycle (the row is *computed* unconditionally inside the compiled
+    programs either way — see ``device_metrics.py`` — so toggling this
+    only gates the one host↔device pull and the record fields, never the
+    compiled program). ``flight_cycles``/``flight_dir`` size and place
+    the flight recorder's post-mortem bundles (dumped on any health
+    sentinel trip)."""
     enabled: bool = False
     trace: bool = True
     metrics: bool = True
+    device_metrics: bool = True
+    flight_cycles: int = DEFAULT_RING
+    flight_dir: Optional[str] = None
+
+    # relative per-cycle change of the total-energy fingerprint above
+    # which the energy-drift sentinel trips (blowup detector, not a
+    # conservation test — SPH with viscosity drifts legitimately)
+    energy_drift_tol: float = 0.5
 
 
 class RunObserver:
@@ -69,20 +89,31 @@ class RunObserver:
         # fallback cost model when the engine doesn't carry one (local
         # quadrants) — the measured-vs-modelled report works everywhere
         self._own_cost_model = cost_model or CostModel(rates={})
+        # flight recorder: ring of the last K cycles' device-metric rows,
+        # plus the span mark at each ring cycle's start so a dump can
+        # slice exactly the ring window out of the trace
+        self.flight = FlightRecorder(spec.flight_cycles)
+        self._cycle_marks = deque(maxlen=max(int(spec.flight_cycles), 1))
+        self._last_energy: Optional[float] = None
 
     # ---------------------------------------------------------- per cycle
     def end_cycle(self, sim, stats: Dict[str, Any]) -> Dict[str, Any]:
         eng = getattr(sim, "engine", sim)
+        self._cycle_marks.append((self.cycle, self._span_mark))
         spans = self.tracer.spans[self._span_mark:]
         self._span_mark = len(self.tracer.spans)
 
         phase_wall: Dict[str, float] = {}
         phase_count: Dict[str, int] = {}
         phase_units: Dict[str, float] = {}
+        # phase wall with collective duplicates folded once — the honest
+        # seconds for apportioning fused-program cost across phases
+        dedup_wall: Dict[str, float] = {}
         busy: Dict[int, float] = {}
         work: Dict[int, float] = {}
         cm = getattr(eng, "_cost_model", None) or self._own_cost_model
         seen_collective = set()
+        seen_wall = set()
         for s in spans:
             if s.name in UMBRELLA_SPANS:
                 continue
@@ -92,6 +123,10 @@ class RunObserver:
             phase_count[s.name] = phase_count.get(s.name, 0) + 1
             busy[s.rank] = busy.get(s.rank, 0.0) + dur
             collective = bool(a.get("collective"))
+            wkey = (s.name, s.t0, s.t1)
+            if not collective or wkey not in seen_wall:
+                dedup_wall[s.name] = dedup_wall.get(s.name, 0.0) + dur
+                seen_wall.add(wkey)
             if not collective:
                 work[s.rank] = work.get(s.rank, 0.0) + dur
             units = a.get("units", a.get("pairs"))
@@ -171,6 +206,51 @@ class RunObserver:
             except Exception:       # diagnostics must never kill the run
                 pass
 
+        # ---- device metrics: the in-program telemetry row the engine
+        # accumulated on device and pulled once this cycle (schema v2)
+        dmx = getattr(eng, "device_metrics_last", None)
+        if self.spec.device_metrics and dmx is not None:
+            counts, values = dmx
+            summary = dm.summarize(counts, values)
+            rec["device_metrics"] = summary
+            rec["device_imbalance"] = summary["imbalance"]
+            du = dm.phase_units(summary)
+            rec["device_phase_units"] = du
+            # health: in-program sentinel flags + the host-side
+            # energy-drift check on the fingerprint
+            energy = [fp["energy_total"]
+                      for fp in dm.fingerprint(np.asarray(values))]
+            e_tot = (sum(e for e in energy if e is not None)
+                     if any(e is not None for e in energy) else None)
+            drift = False
+            if e_tot is not None and self._last_energy is not None:
+                ref = max(abs(self._last_energy), 1e-12)
+                drift = abs(e_tot - self._last_energy) / ref \
+                    > self.spec.energy_drift_tol
+            self._last_energy = e_tot
+            tripped = bool(summary["tripped"]) or drift
+            rec["health"] = {"flags": summary["flags"],
+                             "energy_drift": drift, "tripped": tripped}
+            # fully fused runs have no per-phase spans — apportion the
+            # deduped fused-program wall across phases by the
+            # device-measured work units so measured_vs_modelled() still
+            # refines per-kind rates
+            if "density" not in phase_wall and hasattr(cm, "observe"):
+                fused_wall = sum(dedup_wall.get(n, 0.0)
+                                 for n in ("fused_substep", "fused_final"))
+                tot = du["density"] + du["force"]
+                if fused_wall > 0 and tot > 0:
+                    for kind in ("density", "force"):
+                        if du[kind] > 0:
+                            cm.observe(kind, du[kind],
+                                       fused_wall * du[kind] / tot)
+            self.flight.record(self.cycle, counts, values)
+            if tripped:
+                reason = drift and "energy-drift" or next(
+                    (k.replace("flag_", "") for k, v in
+                     summary["flags"].items() if v), "sentinel")
+                rec["flight_dump"] = self.dump_flight(reason=reason)
+
         # ---- cost-model feedback summary
         if hasattr(cm, "measured_vs_modelled"):
             rec["cost_ratios"] = cm.measured_vs_modelled()
@@ -183,6 +263,20 @@ class RunObserver:
             self.records.append(jsonify(rec))
         self.cycle += 1
         return rec
+
+    # ------------------------------------------------------ flight recorder
+    def dump_flight(self, *, reason: str,
+                    out_dir: Optional[str] = None) -> str:
+        """Write a post-mortem bundle of the flight ring + trace slice.
+
+        Called automatically on a sentinel trip; callers (the fleet
+        runner on a lane EXPIRED / deadline miss, the ``dump`` CLI) may
+        invoke it directly. Returns the bundle directory."""
+        base = out_dir or self.spec.flight_dir \
+            or os.environ.get("REPRO_FLIGHT_DIR", "flight-dumps")
+        mark = self._cycle_marks[0][1] if self._cycle_marks else 0
+        return self.flight.dump(base, reason=reason, cycle=self.cycle,
+                                spans=self.tracer.spans[mark:])
 
     def _update_registry(self, rec: Dict[str, Any]) -> None:
         reg = self.registry
@@ -206,11 +300,23 @@ class RunObserver:
         for k in ("bins_refreshes", "repartitions"):
             if k in rec:
                 reg.count(k, rec[k])
+        du = rec.get("device_phase_units")
+        if du:
+            for kind, units in du.items():
+                reg.inc(f"device_units_{kind}", units)
+        health = rec.get("health")
+        if health:
+            reg.inc("sentinel_trips", 1 if health["tripped"] else 0)
+            for name, n in health["flags"].items():
+                reg.inc(f"sentinel_{name}", n)
+        if "flight_dump" in rec:
+            reg.inc("flight_dumps", 1)
         reg.inc("cycles", 1)
         reg.inc("updates", rec.get("updates", 0))
         reg.inc("pair_tasks", rec.get("pair_tasks", 0))
-        for k in ("imbalance", "dead_frac", "bin_occupancy_imbalance"):
-            if k in rec:
+        for k in ("imbalance", "dead_frac", "bin_occupancy_imbalance",
+                  "device_imbalance"):
+            if rec.get(k) is not None:
                 reg.gauge(k, rec[k])
         if "depth" in rec:
             reg.gauge("depth", rec["depth"])

@@ -158,6 +158,27 @@ def write_metrics_jsonl(path: str, records: Iterable[Dict[str, Any]]) -> None:
             f.write(json.dumps(jsonify(rec)) + "\n")
 
 
+def upgrade_record(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """Normalise a metrics record to the schema-v2 shape.
+
+    v1 records (PR 5) predate the device-metrics block; readers that
+    branch on the new fields (``analysis/report.py``, the flight-bundle
+    tools) call this so a v1 log renders through the same code path —
+    the added fields are explicit "not measured" markers, and the
+    original schema number is preserved under ``schema_original``.
+    """
+    if rec.get("schema", 1) >= 2:
+        return rec
+    up = dict(rec)
+    up["schema_original"] = up.get("schema", 1)
+    up["schema"] = 2
+    up.setdefault("device_metrics", None)
+    up.setdefault("device_phase_units", None)
+    up.setdefault("device_imbalance", None)
+    up.setdefault("health", None)
+    return up
+
+
 def read_metrics_jsonl(path: str) -> List[Dict[str, Any]]:
     out = []
     with open(path) as f:

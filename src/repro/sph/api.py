@@ -336,6 +336,8 @@ class _SimulationBase:
         eng = getattr(self, "engine", None)
         if eng is not None and hasattr(eng, "tracer"):
             eng.tracer = tr
+        if eng is not None and hasattr(eng, "device_metrics_enabled"):
+            eng.device_metrics_enabled = bool(ospec.device_metrics)
         transport = getattr(eng, "_transport", None)
         if transport is not None:
             transport.tracer = tr
@@ -360,6 +362,20 @@ class _SimulationBase:
             for cb in callbacks:
                 cb(self, stats)
         return log
+
+
+def _global_metrics_row(counts, values, rank, *, nreal, npairs, nslots=0):
+    """One global-dt step's telemetry row (host-mirror path): every real
+    particle is active every step, work units are the full pair list."""
+    from ..observability import device_metrics as dmetrics
+    counts[rank] += dmetrics.host_row(
+        substeps=1, drift_active=nreal, density_active=nreal,
+        force_active=nreal, pair_int=npairs, exch_slots=nslots)[0]
+    vi = dmetrics.VALUE_INDEX
+    values[rank, vi["density_units"]] += npairs
+    values[rank, vi["force_units"]] += npairs
+    values[rank, vi["exchange_units"]] += nslots
+    values[rank, vi["kick_units"]] += nreal
 
 
 class _LocalGlobal(_SimulationBase):
@@ -392,6 +408,23 @@ class _LocalGlobal(_SimulationBase):
                 dt = float(cfl_timestep(self.engine.state,
                                         self.spec.physics))
             self.engine.run(1, dt=dt)
+        eng = self.engine
+        if eng.device_metrics_enabled:
+            from ..observability import device_metrics as dmetrics
+            st = eng.state
+            c = st.cells
+            mask = np.asarray(c.mask)
+            counts, values = dmetrics.zero_rows(1)
+            _global_metrics_row(counts, values, 0,
+                                nreal=int((mask > 0).sum()),
+                                npairs=int(np.asarray(eng.pairs.ci).shape[0]))
+            dmetrics.state_health(mask, np.asarray(c.vel), np.asarray(c.u),
+                                  np.asarray(st.rho), np.asarray(c.mass),
+                                  counts, values, rank=0)
+            eng.device_metrics_last = (counts, values)
+            eng.device_metrics_pulls += 1
+        else:
+            eng.device_metrics_last = None
         return {"t": self.time, "dt": dt, "wall": sp.elapsed}
 
     def diagnostics(self):
@@ -485,6 +518,29 @@ class _DistGlobal(_SimulationBase):
             dt = self._dt()
             self.engine.step(dt)
             self._time += dt
+        eng = self.engine
+        if eng.device_metrics_enabled:
+            from ..observability import device_metrics as dmetrics
+            plan = eng.plan
+            nd, K = plan.ndev, plan.K
+            mask = np.asarray(eng.dcells.mask).reshape(nd, K, -1)
+            vel = np.asarray(eng.dcells.vel).reshape(nd, K, -1, 3)
+            u = np.asarray(eng.dcells.u).reshape(nd, K, -1)
+            rho = np.asarray(eng.rho).reshape(nd, K, -1)
+            mass = np.asarray(eng.dcells.mass).reshape(nd, K, -1)
+            counts, values = dmetrics.zero_rows(nd)
+            for r in range(nd):
+                _global_metrics_row(
+                    counts, values, r,
+                    nreal=int((mask[r] > 0).sum()),
+                    npairs=int(plan.pair_w[r].sum()),
+                    nslots=int(plan.export_valid[r].sum()))
+                dmetrics.state_health(mask[r], vel[r], u[r], rho[r],
+                                      mass[r], counts, values, rank=r)
+            eng.device_metrics_last = (counts, values)
+            eng.device_metrics_pulls += 1
+        else:
+            eng.device_metrics_last = None
         return {"t": self._time, "dt": dt, "wall": sp.elapsed}
 
     def diagnostics(self):

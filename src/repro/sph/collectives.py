@@ -58,6 +58,7 @@ from ..distributed.mesh_utils import ranks_mesh
 from ..distributed.transport import (BucketPolicy, CompileProbe, ProgramCache,
                                      ShipSlots, Transport, pack_allgather,
                                      pack_rounds)
+from ..observability import device_metrics as dmetrics
 from .cellgrid import PairList, ParticleCells
 from .physics import force_block
 from .timebins import (STATE_AUX_FIELDS, STATE_CELL_FIELDS, TimeBinState,
@@ -237,10 +238,16 @@ def build_fused_substep_program(mesh, axis: str, *, mode: str,
     sharded over ``axis`` and donated so buffers are reused in place),
     ``tables`` (pair lists, interior/cut split positions, wake floors and
     exchange index tables for this sub-step) and ``scalars`` (replicated
-    dt/level/…). Returns the updated state dict plus a per-rank
-    ``changed`` flag: 1 iff any owned row's bin deepened — the only signal
-    the host needs mid-cycle (it triggers a bins-mirror refresh; the
-    dynamical state never leaves the device until the cycle gather).
+    dt/level/…). Returns the updated state dict, a per-rank ``changed``
+    flag (1 iff any owned row's bin deepened — the only signal the host
+    needs mid-cycle: it triggers a bins-mirror refresh; the dynamical
+    state never leaves the device until the cycle gather), and a per-rank
+    :mod:`~repro.observability.device_metrics` row — the in-program
+    telemetry counters. The row is an **unconditional** third output:
+    its reductions only add consumers to values the physics already
+    computes (never producers), so instrumented and uninstrumented runs
+    share this one compiled program per signature (zero extra compiles)
+    and the state output is bitwise unchanged — both conformance-pinned.
     """
     perms = [list(rnd) for rnd in rounds]
 
@@ -282,25 +289,54 @@ def build_fused_substep_program(mesh, axis: str, *, mode: str,
             st = _apply_final_kick(st, dv, du, rho2, om2,
                                    scalars["dt_max"], cfg=cfg)
             changed = jnp.zeros((1,), jnp.int32)
+            kicked = jnp.sum((active > 0) & (st.cells.mask > 0))
+            deepened = jnp.zeros((), jnp.int32)
+            woken = jnp.zeros((), jnp.int32)
+            nexch = 1
         else:
-            st, _ = _apply_force_kick(st, active, dv, du, rho2, om2,
-                                      tbl["wake"], scalars["dt_max"],
-                                      scalars["depth"], scalars["u_floor"],
-                                      cfg=cfg)
+            st, kicked = _apply_force_kick(st, active, dv, du, rho2, om2,
+                                           tbl["wake"], scalars["dt_max"],
+                                           scalars["depth"],
+                                           scalars["u_floor"], cfg=cfg)
             vel, uu, bb, ts, ac, dd = xchg(
                 tbl, [st.cells.vel, st.cells.u, st.bins, st.t_start,
                       st.accel, st.dudt])
-            changed = jnp.any(bb[:K] != blk["bins"][:K]
-                              ).astype(jnp.int32)[None]
+            deepened = jnp.sum(bb[:K] != blk["bins"][:K]
+                               ).astype(jnp.int32)
+            changed = (deepened > 0).astype(jnp.int32)[None]
+            woken = jnp.sum(tbl["wake"] > scalars["level"]
+                            ).astype(jnp.int32)
             st = st._replace(cells=st.cells._replace(vel=vel, u=uu),
                              bins=bb, t_start=ts, accel=ac, dudt=dd)
+            nexch = 2
+        # per-slot wire bytes are static: exchange 1 ships 4 (cap,)
+        # fields; exchange 2 ships vel/accel (cap, 3) + u/bins/t_start/
+        # dudt (cap,)
+        cap = int(st.cells.mass.shape[1])
+        slot_bytes = 4 * cap * 4
+        if nexch == 2:
+            slot_bytes += 10 * cap * 4
+        nslots = jnp.sum(tbl["e_valid"] > 0).astype(jnp.int32)
+        # telemetry covers the K *owned* rows only — halo mirrors belong
+        # to their owner's row, so per-rank work and the summed energy
+        # fingerprint match the host-path (no-halo) semantics exactly
+        met_counts, met_values = dmetrics.measure_substep(
+            mask=st.cells.mask[:K], active=active[:K],
+            vel=st.cells.vel[:K], u=st.cells.u[:K],
+            mass=st.cells.mass[:K], rho=st.rho[:K],
+            live_pairs=jnp.sum(pmask),
+            pair_int=jnp.sum(tbl["int_valid"] > 0),
+            pair_cut=jnp.sum(tbl["cut_valid"] > 0),
+            exch_slots=nslots * nexch, exch_bytes=nslots * slot_bytes,
+            deepened=deepened, woken=woken, kicked=kicked)
+        met = {"counts": met_counts[None], "values": met_values[None]}
         out = {k: getattr(st.cells, k) for k in STATE_CELL_FIELDS}
         out.update({k: getattr(st, k) for k in STATE_AUX_FIELDS})
         out["time"] = st.time
-        return {k: v[None] for k, v in out.items()}, changed
+        return {k: v[None] for k, v in out.items()}, changed, met
 
     fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), P()),
-                   out_specs=(P(axis), P(axis)))
+                   out_specs=(P(axis), P(axis), P(axis)))
     return jax.jit(fn, donate_argnums=(0,))
 
 

@@ -72,6 +72,7 @@ from ..distributed.transport import (BucketPolicy, CompileProbe, RESIDENCIES,
                                      ResidentBuffers, ShipSlots, TRANSPORTS,
                                      TransferProbe, make_transport, next_pow2,
                                      pack_allgather, pack_rounds)
+from ..observability import device_metrics as dmetrics
 from .cellgrid import PairList, ParticleCells
 from .engine import SPHConfig, build_taskgraph
 from .timebins import (STATE_AUX_FIELDS, STATE_CELL_FIELDS,
@@ -305,6 +306,14 @@ class DistTimeBinSimulation(TimeBinSimulation):
         # power-of-two crossing per stream)
         self._fused_buckets = BucketPolicy(min_bucket=8,
                                            shrink_patience=10 ** 9)
+        # device telemetry: the fused programs always *compute* the
+        # per-rank metrics row (see observability/device_metrics.py —
+        # that's what keeps the instrumented program the only program);
+        # this flag gates the once-per-cycle host pull + observer merge
+        self.device_metrics_enabled = False
+        self.device_metrics_last: Optional[Tuple[np.ndarray,
+                                                 np.ndarray]] = None
+        self.device_metrics_pulls = 0
 
     # ------------------------------------------------------- jitted phases
     @staticmethod
@@ -580,6 +589,39 @@ class DistTimeBinSimulation(TimeBinSimulation):
             "residency": self.residency,
         }
 
+    # ------------------------------------------------- device-metrics pull
+    def _metrics_pull(self, counts, values) -> None:
+        """Adopt one cycle's accumulated telemetry row: pull it to host —
+        ONE ledgered boundary transfer per cycle (the acceptance bound
+        ``benchmarks/observability_bench.py`` reports) — and expose it as
+        ``device_metrics_last`` for the observer's end-of-cycle merge.
+        Must run inside ``run_cycle`` so the transfer ledger the observer
+        copies verbatim already contains this pull."""
+        counts_h = np.asarray(counts)
+        values_h = np.asarray(values)
+        self.transfers.record("metrics", counts_h.nbytes + values_h.nbytes,
+                              boundary=True)
+        self.device_metrics_pulls += 1
+        self.device_metrics_last = (counts_h, values_h)
+
+    def _mirror_metrics_finish(self, plan: RankPlan, counts: np.ndarray,
+                               values: np.ndarray) -> None:
+        """Host-residency tail of the telemetry row: sentinel flags and
+        per-rank state fingerprints from the gathered global mirror
+        (whose rows the host path round-trips anyway)."""
+        st = self.state
+        mask = np.asarray(st.cells.mask)
+        vel = np.asarray(st.cells.vel)
+        u = np.asarray(st.cells.u)
+        rho = np.asarray(st.rho)
+        mass = np.asarray(st.cells.mass)
+        for r in range(plan.nranks):
+            own = plan.owned[r]
+            if not len(own):
+                continue
+            dmetrics.state_health(mask[own], vel[own], u[own], rho[own],
+                                  mass[own], counts, values, rank=r)
+
     def _cycle_substeps_host(self, ctx: Dict[str, object]) -> Dict[str, int]:
         """The host-orchestrated ladder: per-rank phase programs with the
         transport's exchanges (host or collective wire) in between."""
@@ -603,6 +645,12 @@ class DistTimeBinSimulation(TimeBinSimulation):
         self.halo_log = []          # latest cycle only (bounded memory)
         bins_h = ctx["bins_host"].copy()
         wake_floor = self._wake_floor(bins_h, mask_host)
+        dm_on = self.device_metrics_enabled
+        met_counts, met_values = dmetrics.zero_rows(plan.nranks)
+        mCI, mVI = dmetrics.COUNT_INDEX, dmetrics.VALUE_INDEX
+        alive_per_rank = [int((mask_host[plan.owned[r]] > 0).sum())
+                          if len(plan.owned[r]) else 0
+                          for r in range(plan.nranks)]
 
         # per-cycle host caches: the extended wake floors are rebuilt only
         # when the wake floor itself changes (a wake-up or deepening), not
@@ -708,6 +756,9 @@ class DistTimeBinSimulation(TimeBinSimulation):
                     continue
                 new_bins = np.asarray(states[r].bins)[:len(own)]
                 if not np.array_equal(bins_h[own], new_bins):
+                    if dm_on:
+                        met_counts[r, mCI["deepen_events"]] += int(
+                            (bins_h[own] != new_bins).sum())
                     bins_h[own] = new_bins
                     floor_dirty = True
             if floor_dirty:
@@ -719,6 +770,26 @@ class DistTimeBinSimulation(TimeBinSimulation):
             pair_tasks += int((active_cells[self._ci]
                                | active_cells[self._cj]).sum())
             force_substeps += 1
+            if dm_on:
+                sslots = nship // plan.nranks
+                sbytes = sslots * mask_host.shape[1] * 4 \
+                    * (_EX1_FIELDS + _EX2_FIELDS)
+                for r in range(plan.nranks):
+                    own = plan.owned[r]
+                    act_r = int(active_p[own].sum()) if len(own) else 0
+                    nlive = subs[r][2]
+                    met_counts[r] += np.asarray(dmetrics.host_row(
+                        substeps=1, drift_active=alive_per_rank[r],
+                        density_active=act_r, force_active=act_r,
+                        pair_int=nlive, exch_slots=2 * sslots,
+                        exch_bytes=sbytes,
+                        wake_events=int((bins_h[own]
+                                         < wake_floor[own, None]).sum())
+                        if len(own) else 0)[0])
+                    met_values[r, mVI["density_units"]] += nlive
+                    met_values[r, mVI["force_units"]] += nlive
+                    met_values[r, mVI["exchange_units"]] += sslots
+                    met_values[r, mVI["kick_units"]] += act_r
 
         # final sync sub-step: everyone active, full pair lists, full cut
         dt_d = jnp.float32((nsub - drifted_to) * dt_min)
@@ -764,11 +835,31 @@ class DistTimeBinSimulation(TimeBinSimulation):
         jax.block_until_ready(states[-1].cells.pos)
         updates += nreal
         pair_tasks += len(self._ci)
+        if dm_on:
+            fslots = plan.cut_slots // plan.nranks if plan.cut else 0
+            fbytes = fslots * mask_host.shape[1] * 4 * _EX1_FIELDS
+            for r in range(plan.nranks):
+                nlive = subs[r][2]
+                met_counts[r] += np.asarray(dmetrics.host_row(
+                    substeps=1, drift_active=alive_per_rank[r],
+                    density_active=alive_per_rank[r],
+                    force_active=alive_per_rank[r],
+                    pair_int=nlive, exch_slots=fslots,
+                    exch_bytes=fbytes)[0])
+                met_values[r, mVI["density_units"]] += nlive
+                met_values[r, mVI["force_units"]] += nlive
+                met_values[r, mVI["exchange_units"]] += fslots
+                met_values[r, mVI["kick_units"]] += alive_per_rank[r]
 
         tg = tr.now() if tr.enabled else 0.0
         self._gather_state(plan, states)
         if tr.enabled:
             tr.record_all(range(plan.nranks), "gather", tg, collective=1)
+        if dm_on:
+            self._mirror_metrics_finish(plan, met_counts, met_values)
+            self._metrics_pull(met_counts, met_values)
+        else:
+            self.device_metrics_last = None
         return {"updates": updates, "pair_tasks": pair_tasks,
                 "force_substeps": force_substeps,
                 "cycle_exported": cycle_exported,
@@ -1004,12 +1095,23 @@ class DistTimeBinSimulation(TimeBinSimulation):
                                         tables, sig)
             return table_cache[key]
 
+        dm_on = self.device_metrics_enabled
+        met_acc: List = []          # one (counts, values) device-ref cell
+
         def run_fused(tables, sig, scalars, final):
             prog = self._fused_program(sig, final=final)
             state_in = {name: res[name] for name in
                         self._CELL_FIELDS + self._AUX_FIELDS + ("time",)}
-            out_state, changed = prog(state_in, tables, scalars)
+            out_state, changed, met = prog(state_in, tables, scalars)
             res.update(out_state)
+            if dm_on:
+                row = (met["counts"], met["values"])
+                if not met_acc:
+                    met_acc.append(row)
+                else:
+                    # eager device-side fold of the tiny rows: no host
+                    # sync, no registered program, no extra compile
+                    met_acc[0] = dmetrics.combine(met_acc[0], row, jnp)
             return changed
 
         for n in range(1, nsub):
@@ -1097,6 +1199,12 @@ class DistTimeBinSimulation(TimeBinSimulation):
                           slots=slots.total, active_frac=1.0, collective=1)
         updates += nreal
         pair_tasks += len(self._ci)
+
+        if dm_on and met_acc:
+            # one pull per cycle: the whole accumulated telemetry row
+            self._metrics_pull(*met_acc[0])
+        elif not dm_on:
+            self.device_metrics_last = None
 
         tg = tr.now() if tr.enabled else 0.0
         self._gather_resident(plan, res)

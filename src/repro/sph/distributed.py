@@ -442,6 +442,10 @@ class DistSimulation:
                                                 halo=halo)
         with mesh:
             self.accel, self.dudt, self.rho = self._init(self.dcells)
+        # device-metrics carry (per rank), filled by the api adapter
+        self.device_metrics_enabled = False
+        self.device_metrics_last = None
+        self.device_metrics_pulls = 0
 
     def step(self, dt: float):
         with self.mesh:

@@ -338,6 +338,10 @@ class Simulation:
         self.state = init_state(self.cells, self.pairs, self.cfg)
         self._steps_since_rebin = 0
         self.tracer = NULL_TRACER      # rebound when observe=True
+        # device-metrics carry (single rank), filled by the api adapter
+        self.device_metrics_enabled = False
+        self.device_metrics_last = None
+        self.device_metrics_pulls = 0
 
     def _rebin(self, pos, vel, mass, u, h):
         self.cells, self.perm = bin_particles(self.spec, pos, vel, mass, u, h)

@@ -37,6 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..observability import device_metrics as dmetrics
 from ..observability.tracer import NULL_TRACER
 from .cellgrid import GridSpec, PairList, ParticleCells, bin_particles, \
     build_pair_list, choose_grid, unbin
@@ -470,6 +471,12 @@ class TimeBinSimulation:
         self.substeps = 0
         self.tracer = NULL_TRACER       # rebound when observe=True
         self.cycle_index = 0
+        # device-metrics carry (single rank): rows built from the host
+        # scalars the ladder already pulls (nact, nlive) — no extra sync
+        self.device_metrics_enabled = False
+        self.device_metrics_last: Optional[Tuple[np.ndarray,
+                                                 np.ndarray]] = None
+        self.device_metrics_pulls = 0
 
     # ------------------------------------------------------------- plumbing
     def _rebin(self, pos, vel, mass, u, h):
@@ -642,6 +649,9 @@ class TimeBinSimulation:
         # host caches — bins only change at force sub-steps (deepening)
         bins_h = np.asarray(state.bins)
         wake_floor = self._wake_floor(bins_h, mask_host)
+        dm_on = self.device_metrics_enabled
+        met_counts, met_values = dmetrics.zero_rows(1)
+        mVI = dmetrics.VALUE_INDEX
         for n in range(1, nsub):
             level = active_level(n, depth)
             active_p = ((bins_h >= level)
@@ -678,9 +688,21 @@ class TimeBinSimulation:
             # bins only change at force sub-steps (deepening / wake-up):
             # recompute the wake floors only when they actually did
             bins_new = np.asarray(state.bins)
+            deepened = 0
             if not np.array_equal(bins_new, bins_h):
+                deepened = int((bins_new != bins_h).sum())
                 bins_h = bins_new
                 wake_floor = self._wake_floor(bins_h, mask_host)
+            if dm_on:
+                met_counts[0] += dmetrics.host_row(
+                    substeps=1, drift_active=nreal,
+                    density_active=int(nact), force_active=int(nact),
+                    pair_int=nlive, deepen_events=deepened,
+                    wake_events=int(((bins_h < wake_floor[:, None])
+                                     & (mask_host > 0)).sum()))[0]
+                met_values[0, mVI["density_units"]] += nlive
+                met_values[0, mVI["force_units"]] += nlive
+                met_values[0, mVI["kick_units"]] += int(nact)
         if tr.enabled:
             tr.ctx["substep"] = nsub
         with tr.span("drift", units=nreal):
@@ -696,6 +718,22 @@ class TimeBinSimulation:
             jax.block_until_ready(state.cells.pos)
         updates += nreal
         pair_tasks += len(self._ci)
+        if dm_on:
+            met_counts[0] += dmetrics.host_row(
+                substeps=1, drift_active=nreal, density_active=nreal,
+                force_active=nreal, pair_int=len(self._ci))[0]
+            met_values[0, mVI["density_units"]] += len(self._ci)
+            met_values[0, mVI["force_units"]] += len(self._ci)
+            met_values[0, mVI["kick_units"]] += nreal
+            c = state.cells
+            dmetrics.state_health(np.asarray(c.mask), np.asarray(c.vel),
+                                  np.asarray(c.u), np.asarray(state.rho),
+                                  np.asarray(c.mass), met_counts,
+                                  met_values, rank=0)
+            self.device_metrics_last = (met_counts, met_values)
+            self.device_metrics_pulls += 1
+        else:
+            self.device_metrics_last = None
         self.state = state
         if self.rebin_each_cycle:
             with tr.span("rebin", units=nreal):

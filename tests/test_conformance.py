@@ -262,3 +262,112 @@ def test_fused_resident_transfer_discipline_four_ranks():
     assert eng._transport.programs.builds == builds
     assert eng.probe.total_compiles() == compiles
     assert eng.transfers.stats()["intra_state_bytes"] == 0
+
+
+# --------------------------------------------------- device-metrics carry
+def _quadrant_state(sim) -> dict:
+    """Physics-visible state for any quadrant (plain-vs-instrumented)."""
+    eng = sim.engine
+    if hasattr(eng, "dcells"):                      # global × distributed
+        g = eng.gather_cells()
+        return {n: np.asarray(getattr(g, n))
+                for n in ("pos", "vel", "u", "h", "mass", "mask")}
+    if hasattr(eng.state, "bins"):                  # timebin family
+        return _snapshot(eng)
+    out = {n: np.asarray(getattr(eng.state.cells, n))  # global × local
+           for n in ("pos", "vel", "u", "h", "mass", "mask")}
+    out["rho"] = np.asarray(eng.state.rho)
+    return out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("integrator,backend", [
+    ("global", "local"), ("timebin", "local"),
+    ("global", "distributed"), ("timebin", "distributed")])
+def test_device_metrics_carry_bitwise_all_quadrants(integrator, backend):
+    """Enabling the telemetry carry changes no number in any quadrant, and
+    every quadrant reports a populated per-rank work row."""
+    kw = dict(SCENARIOS["sedov"])
+    kw.update(integrator=integrator, backend=backend, dt=0.004)
+    if backend == "distributed":
+        kw.update(ranks=1, transport="collective")
+        if integrator == "timebin":
+            kw.update(residency="device")
+    plain = build_simulation(SimulationSpec(**kw))
+    inst = build_simulation(SimulationSpec(**kw, observe=True))
+    snaps_p, snaps_i = [], []
+    for _ in range(NCYCLES):
+        plain.step()
+        inst.step()
+        snaps_p.append(_quadrant_state(plain))
+        snaps_i.append(_quadrant_state(inst))
+    _assert_bitwise(snaps_i, snaps_p, f"dmetrics/{integrator}/{backend}")
+    eng = inst.engine
+    assert eng.device_metrics_enabled
+    assert plain.engine.device_metrics_last is None
+    counts, values = eng.device_metrics_last
+    assert counts.shape[0] == 1 and values.shape[0] == 1
+    assert eng.device_metrics_pulls == NCYCLES
+    rec = inst.observer.records[-1]
+    work = rec["device_metrics"]["per_rank_work"]
+    assert len(work) == 1 and work[0] > 0
+    assert rec["health"]["tripped"] is False
+
+
+@pytest.mark.slow
+def test_device_metrics_carry_mints_no_extra_programs():
+    """The fused program with the telemetry output IS the program: turning
+    the carry off (device_metrics=False) compiles nothing different and
+    produces the bitwise-same trajectory — the row is always computed, the
+    flag only gates the once-per-cycle host pull."""
+    base = _timebin_spec("sedov", backend="distributed", ranks=1,
+                         transport="collective", residency="device")
+    off = build_simulation(base.with_(
+        observe={"device_metrics": False}))
+    on = build_simulation(base.with_(observe=True))
+    got_off = _trajectory(off)
+    got_on = _trajectory(on)
+    _assert_bitwise(got_on, got_off, "dmetrics-on-vs-off")
+    assert on.engine.probe.total_compiles() \
+        == off.engine.probe.total_compiles()
+    assert on.engine.probe.counts() == off.engine.probe.counts()
+    # the pull is ledgered on the instrumented engine only, once per cycle
+    assert on.engine.transfers.stats()["boundary_events"]["metrics"] \
+        == NCYCLES
+    assert "metrics" not in off.engine.transfers.stats()["boundary_events"]
+    assert off.engine.device_metrics_last is None
+
+
+@requires4
+@pytest.mark.slow
+def test_device_metrics_four_rank_fused_rows():
+    """4-rank fused run: per-rank per-phase work comes from inside the
+    program, covers owned rows only (ranks sum to the global particle
+    count, not 4× it), and still costs one ledgered pull per cycle."""
+    spec = _timebin_spec("sedov", backend="distributed", ranks=4,
+                         transport="collective", residency="device",
+                         observe=True)
+    sim = build_simulation(spec)
+    got = _trajectory(sim)
+    _assert_bitwise(got, _reference("sedov"), "dmetrics/4rank/fused")
+    eng = sim.engine
+    counts, values = eng.device_metrics_last
+    assert counts.shape[0] == 4 and values.shape[0] == 4
+    rec = sim.observer.records[-1]
+    dmx = rec["device_metrics"]
+    assert len(dmx["per_rank_work"]) == 4
+    assert all(w > 0 for w in dmx["per_rank_work"])
+    assert rec["device_imbalance"] >= 1.0
+    # owned-rows-only: summed drift-active particles over ranks equals the
+    # alive count exactly (halo mirrors are not double-counted)
+    from repro.observability import COUNT_COLUMNS
+    drift = counts[:, COUNT_COLUMNS.index("drift_active")]
+    subs = counts[:, COUNT_COLUMNS.index("substeps")]
+    nreal = int((np.asarray(_reference("sedov")[-1]["mask"]) > 0).sum())
+    assert (subs == subs[0]).all() and subs[0] == 2 * NCYCLES \
+        or (subs > 0).all()          # every rank ran every sub-step
+    assert (drift > 0).all()
+    assert drift.sum() == subs[0] * nreal
+    assert eng.transfers.stats()["boundary_events"]["metrics"] == NCYCLES
+    # the fused run feeds measured per-phase work into the cost model
+    assert {"density", "force"} <= set(rec["cost_ratios"])

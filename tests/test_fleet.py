@@ -327,3 +327,40 @@ class TestShardedFleet:
                     np.asarray(r.result.particles[k]),
                     np.asarray(ref.particles[k]), rtol=1e-4, atol=1e-5,
                     err_msg=f"{r.request_id}: field {k}")
+
+
+# ---------------------------------------------------- terminal visibility
+class TestTerminalVisibility:
+    def test_expired_sweep_counts_traces_and_dumps(self, tmp_path):
+        from repro.observability.flight import validate_bundle
+        runner = FleetRunner(fleet_devices=1, observe=True,
+                             flight_dir=str(tmp_path))
+        ok = runner.submit(_spec("sedov"), n_steps=1)
+        import time
+        dead = runner.submit(_spec("sedov"), n_steps=1, deadline=0.0)
+        time.sleep(0.01)
+        runner.drain()
+        assert ok.state is RequestState.DONE
+        assert dead.state is RequestState.EXPIRED
+        # every lane's terminal state is counted, including the swept one
+        assert runner.terminal_status == {"done": 1, "expired": 1}
+        assert runner.stats()["terminal_status"] == runner.terminal_status
+        # the sweep is a first-class span on the lane's timeline row
+        spans = [s for s in runner.tracer.spans if s.name == "expired"]
+        assert len(spans) == 1
+        assert spans[0].attrs["request_id"] == dead.request_id
+        assert "deadline" in spans[0].attrs["error"]
+        # ...and produced one validated post-mortem bundle
+        assert len(runner.flight_dumps) == 1
+        manifest = validate_bundle(runner.flight_dumps[0])
+        assert manifest["reason"].startswith("expired")
+        assert manifest["expired"] == [dead.request_id]
+
+    def test_no_flight_dump_without_flight_dir(self):
+        runner = FleetRunner(fleet_devices=1)
+        runner.submit(_spec("sedov"), n_steps=1, deadline=0.0)
+        import time
+        time.sleep(0.01)
+        runner.drain()
+        assert runner.terminal_status == {"expired": 1}
+        assert runner.flight_dumps == []

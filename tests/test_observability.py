@@ -296,3 +296,85 @@ def test_trace_report_renders_timeline_and_tables(tmp_path):
     write_metrics_jsonl(str(metrics_path), records)
     out = trace_report(str(trace_path), str(metrics_path), width=40)
     assert "task timeline" in out and "per-cycle summary" in out
+
+
+# ------------------------------------- device metrics / flight recorder
+def test_upgrade_record_v1_compat():
+    from repro.observability import upgrade_record
+    v1 = {"schema": 1, "cycle": 3, "wall": 0.5, "imbalance": 1.2}
+    up = upgrade_record(dict(v1))
+    assert up["schema"] == METRICS_SCHEMA_VERSION == 2
+    assert up["schema_original"] == 1
+    for key in ("device_metrics", "device_phase_units",
+                "device_imbalance", "health"):
+        assert key in up and up[key] is None
+    assert up["cycle"] == 3 and up["imbalance"] == 1.2
+    # v2 records pass through untouched
+    v2 = upgrade_record({"schema": 2, "device_imbalance": 1.1})
+    assert "schema_original" not in v2 and v2["device_imbalance"] == 1.1
+
+
+def test_flight_recorder_ring_dump_and_validation(tmp_path):
+    from repro.observability import (COUNT_COLUMNS, VALUE_COLUMNS,
+                                     FlightRecorder, read_bundle,
+                                     validate_bundle)
+    from repro.observability import device_metrics as dm
+    fr = FlightRecorder(k=3)
+    for cyc in range(5):
+        counts, values = dm.zero_rows(2)
+        counts[:, 0] = cyc + 1
+        fr.record(cyc, counts, values)
+    assert [r["cycle"] for r in fr.rows()] == [2, 3, 4]  # keeps last 3
+    path = fr.dump(str(tmp_path), reason="unit test!", cycle=4,
+                   extra={"note": "x"})
+    manifest = validate_bundle(path)
+    assert manifest["reason"] == "unit test!"
+    assert manifest["cycle"] == 4 and manifest["records"] == 3
+    assert manifest["ring_cycles"] == [2, 3, 4]
+    assert manifest["note"] == "x"
+    bundle = read_bundle(path)
+    assert bundle["records"][0]["count_columns"] == list(COUNT_COLUMNS)
+    assert bundle["records"][-1]["counts"][0][0] == 5
+    assert len(bundle["records"][0]["values"][0]) == len(VALUE_COLUMNS)
+    # tampering is caught
+    mpath = tmp_path / path.split("/")[-1] / "manifest.json"
+    doc = json.loads(mpath.read_text())
+    doc["records"] = 99
+    mpath.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="record count"):
+        validate_bundle(path)
+
+
+@pytest.mark.slow
+def test_nan_sentinel_trips_and_dumps_flight_bundle(tmp_path):
+    """Poisoning one velocity component trips the in-program NaN sentinel
+    on the very next cycle and drops a validated post-mortem bundle whose
+    manifest names that cycle."""
+    from repro.observability.flight import validate_bundle
+    import jax.numpy as jnp
+    spec = _timebin_spec("sedov", backend="distributed", ranks=1,
+                         transport="collective", residency="device",
+                         observe={"flight_dir": str(tmp_path)})
+    sim = build_simulation(spec)
+    sim.step()
+    obs, eng = sim.observer, sim.engine
+    assert obs.records[-1]["health"]["tripped"] is False
+    assert not obs.flight.dumps
+
+    cells = eng.state.cells
+    vel = np.asarray(cells.vel).copy()
+    c, p = np.argwhere(np.asarray(cells.mask) > 0)[0]
+    vel[c, p, 0] = np.nan
+    eng.state = eng.state._replace(cells=cells._replace(vel=jnp.asarray(vel)))
+    with np.errstate(invalid="ignore"):
+        sim.step()
+
+    rec = obs.records[-1]
+    assert rec["health"]["tripped"] is True
+    assert rec["health"]["flags"]["flag_nan"] > 0
+    assert rec["flight_dump"] == obs.flight.dumps[-1]
+    manifest = validate_bundle(rec["flight_dump"])
+    assert manifest["reason"] == "nan"
+    assert manifest["cycle"] == 1             # tripped on the second cycle
+    assert obs.registry.snapshot()["counters"]["sentinel_trips"] == 1
+    assert obs.registry.snapshot()["counters"]["flight_dumps"] == 1
