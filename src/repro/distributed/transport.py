@@ -103,12 +103,18 @@ class BucketPolicy:
             self._below[key] = 0
             return need
         if need <= cur // 2:
+            # need ≥ min_bucket, so the halved bucket is always legal
+            # here — no separate floor guard, and at the floor itself
+            # (cur == min_bucket) this branch can never be entered.
             self._below[key] = self._below[key] + 1
-            if self._below[key] >= self.shrink_patience \
-                    and cur // 2 >= self.min_bucket:
+            if self._below[key] >= self.shrink_patience:
                 new = cur // 2
                 self.events.append((key, cur, new))
                 self._bucket[key] = new
+                # re-earn the patience at the new size: without this
+                # reset, a stream sitting just under the *new* half-
+                # bucket boundary would halve again on the very next
+                # fit, churning one recompile per fit on a collapse.
                 self._below[key] = 0
                 return new
         else:

@@ -117,6 +117,10 @@ class RequestQueue:
                request_id: Optional[str] = None,
                callback: Optional[Callable[[FleetRequest], None]] = None
                ) -> FleetRequest:
+        # sweep first: a stale burst must not hold admission slots, and
+        # its EXPIRED callbacks must fire even if nobody ever claims —
+        # every front-door entry (submit/poll/claim) runs the sweep
+        self.expire()
         if self.inflight >= self.max_inflight:
             raise AdmissionError(
                 f"fleet at max_inflight={self.max_inflight}; request "
@@ -180,6 +184,15 @@ class RequestQueue:
         req._finish(RequestState.FAILED, error=error)
 
     # ------------------------------------------------------------ reading
+    def poll(self) -> Dict[str, int]:
+        """Deadline sweep + queue stats: the non-claiming status check.
+
+        Before this existed, sweeps ran only inside :meth:`take_ready` —
+        a request with a passed deadline sat QUEUED forever (callback
+        never fired) unless some *other* submission triggered a claim."""
+        self.expire()
+        return self.stats()
+
     def by_state(self, state: RequestState) -> List[FleetRequest]:
         return [r for r in self._all.values() if r.state is state]
 

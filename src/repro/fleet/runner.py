@@ -214,10 +214,20 @@ class FleetRunner:
                request_id: Optional[str] = None,
                callback: Optional[Callable[[FleetRequest], None]] = None
                ) -> FleetRequest:
+        # visible sweep before admission: expired requests get their
+        # terminal count / timeline span / flight bundle here, not only
+        # when a later drain() claims (queue.submit also sweeps, but this
+        # runs first so the runner's accounting sees every expiry)
+        self._sweep_expired(self.queue.expire())
         req = self.queue.submit(spec, n_steps=n_steps, deadline=deadline,
                                 request_id=request_id, callback=callback)
         self.row_names[req.row] = req.request_id
         return req
+
+    def poll(self) -> Dict[str, Any]:
+        """Deadline sweep + fleet stats without claiming any work."""
+        self._sweep_expired(self.queue.expire())
+        return self.stats()
 
     def drain(self) -> List[FleetRequest]:
         """Serve until the queue is empty; returns the finished requests.

@@ -222,6 +222,19 @@ class SimulationSpec:
     # shard_map program (requires transport="collective"). Bit-for-bit
     # identical trajectories either way (tests/test_conformance.py).
     residency: str = "host"
+    # who drives the sub-step ladder of a device-resident cycle:
+    # "host" — the host loop walks the 2**depth sub-steps and uploads
+    # per-level control tables (the reference orchestration);
+    # "device" — the whole ladder lowers into one scanned shard_map
+    # segment that derives activity masks, pair subsets and ship slots
+    # from the device-resident ``bins`` array, with the host consulted
+    # only at segment boundaries and on a sentinel trip (requires
+    # residency="device"). ``segment_cycles`` fuses K consecutive cycles
+    # into one device segment (K = 1 → one cycle per segment).
+    # Bit-for-bit identical trajectories either way
+    # (tests/test_conformance.py).
+    schedule: str = "host"
+    segment_cycles: int = 1
 
     # shared
     capacity_margin: float = 3.0
@@ -268,6 +281,21 @@ class SimulationSpec:
                 "residency='device' keeps rank states on the mesh and "
                 "fuses the exchange into the sub-step programs; it "
                 "requires transport='collective'")
+        if self.schedule not in ("host", "device"):
+            raise ValueError(f"schedule must be 'host' or 'device', "
+                             f"got {self.schedule!r}")
+        if self.schedule == "device" and self.residency != "device":
+            raise ValueError(
+                "schedule='device' derives the sub-step schedule from the "
+                "device-resident bins array; it requires "
+                "residency='device'")
+        if int(self.segment_cycles) < 1:
+            raise ValueError(f"segment_cycles must be >= 1, "
+                             f"got {self.segment_cycles!r}")
+        if self.segment_cycles > 1 and self.schedule != "device":
+            raise ValueError(
+                "segment_cycles > 1 fuses consecutive cycles into one "
+                "device segment; it requires schedule='device'")
         ob = self.observe
         if not isinstance(ob, ObserveSpec):
             if isinstance(ob, bool):
@@ -571,7 +599,8 @@ class _DistTimeBin(_SimulationBase):
             bin_delta=spec.bin_delta, depth_headroom=spec.depth_headroom,
             capacity_margin=spec.capacity_margin,
             transport=spec.transport, transport_mode=spec.transport_mode,
-            residency=spec.residency)
+            residency=spec.residency, schedule=spec.schedule,
+            segment_cycles=spec.segment_cycles)
 
     @property
     def state(self):

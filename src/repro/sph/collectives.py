@@ -60,10 +60,12 @@ from ..distributed.transport import (BucketPolicy, CompileProbe, ProgramCache,
                                      pack_rounds)
 from ..observability import device_metrics as dmetrics
 from .cellgrid import PairList, ParticleCells
-from .physics import force_block
+from .physics import force_block, sound_speed
 from .timebins import (STATE_AUX_FIELDS, STATE_CELL_FIELDS, TimeBinState,
-                       _apply_final_kick, _apply_force_kick, _drift,
-                       _substep_density_phase, substep_active_mask)
+                       _apply_final_kick, _apply_force_kick, _cycle_start,
+                       _drift, _substep_density_phase, assign_bins,
+                       mass_weighted_mean_u, speed_norm,
+                       substep_active_mask, trailing_zeros_table)
 
 
 # ------------------------------------------------------- in-block row copies
@@ -338,6 +340,427 @@ def build_fused_substep_program(mesh, axis: str, *, mode: str,
     fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), P()),
                    out_specs=(P(axis), P(axis), P(axis)))
     return jax.jit(fn, donate_argnums=(0,))
+
+
+# ------------------------------------------------ device-scheduled segments
+# neutral element for integer scatter-max over possibly-empty stencils
+# (same value the host planners use in timebins.limit_neighbour_bins)
+_NEG_INF_BIN = -10 ** 6
+_SCAN_UNROLL = False
+
+
+def build_cycle_scan_program(mesh, axis: str, *, mode: str,
+                             rounds: Sequence[Sequence[Tuple[int, int]]],
+                             nrows: int, K: int, cfg, box: float,
+                             nsub_static: int, bin_delta: int,
+                             activity_aware: bool = True):
+    """Compile one WHOLE cycle — every sub-step — as a single lax.scan.
+
+    The device-scheduled lowering (``schedule="device"``): where
+    :func:`build_fused_substep_program` compiles one sub-step and leaves the
+    ladder bookkeeping (active levels, pair subsets, ship sets, wake floors)
+    to a host loop, this program derives the entire schedule *inside* the
+    compiled program from the device-resident ``bins`` array, so the host
+    dispatches one call per cycle and reads nothing back until the segment
+    boundary.
+
+    Per scan trip n = 1..``nsub_static`` (the static ladder length;
+    ``scalars["nsub"]`` may select a shorter dynamic ladder, later trips are
+    dead):
+
+    * the active level is ``max(depth − tz[n], 0)`` via a static
+      trailing-zeros table;
+    * the wake floor is recomputed from the live bins by pair scatter-max
+      (the host recomputes it only on deepen events; the per-trip recompute
+      reaches the same fixpoint values) and exchanged to halo rows over the
+      full cut, so replica activity masks agree with their owners;
+    * the pair subset is the *static full-touch table* gated by a dynamic
+      mask — a pair is live iff it touches an active cell, exactly the host
+      selection rule — and exchange validity is the static full-cut table
+      gated by receiver-row activity (activity-aware shipping);
+    * trips where no particle is active anywhere (``psum`` of the owned
+      active counts) are *dead*: every state field keeps its carry via a
+      ``where``, matching the host loop's ``continue`` (lazy drift
+      included — the drift span accumulates in a ``drifted_to`` carry);
+    * the final trip (n == nsub) runs the cycle-closing kick; interior and
+      final updates are computed side by side and merged with a ``where``,
+      so one compiled body serves both.
+
+    Padded pair slots contribute exact ±0.0 through the same masked
+    scatters as the host-scheduled fused path — the bitwise contract is
+    ``assert_array_equal`` (±0.0 and NaN compare equal), identical to the
+    existing residency conformance pin.
+
+    The scan is **fully unrolled** (``unroll=nsub_static``): XLA:CPU's
+    while-loop lowering of a rolled scan changes the force-reduction
+    codegen by ~1 ulp versus the straight-line per-sub-step programs,
+    which would break the bitwise contract. Unrolling recovers the exact
+    straight-line HLO; the ladder is short (2^depth trips), so program
+    size stays modest. ``_SCAN_UNROLL`` is a debug hook that swaps in a
+    literal Python loop over trips to separate scan-lowering effects from
+    body bugs.
+
+    Outputs: the updated state dict (donated buffers), a per-rank counter
+    dict (owned active updates, owned live pair tasks, live interior trips,
+    exported slots, live trips, end-of-cycle time) and the cycle's
+    accumulated device-metrics row — counters and health sentinels
+    (NaN/Inf/neg-rho flags) included, so the segment driver's one boundary
+    pull sees everything.
+    """
+    perms = [list(rnd) for rnd in rounds]
+    tz_np = trailing_zeros_table(nsub_static)
+    v_acc = np.asarray(dmetrics._V_ACCUM)
+    v_sum = jnp.asarray(v_acc == "sum")
+    v_last = jnp.asarray(v_acc == "last")
+    v_max = jnp.asarray(v_acc == "max")
+
+    def xchg(tbl, fields, valid):
+        if mode == "ppermute":
+            return [_permute_copy(f, tbl["e_pack"], tbl["e_unpack"], valid,
+                                  perms, axis, nrows) for f in fields]
+        return [_allgather_copy(f, tbl["e_pack"], tbl["e_usrc"],
+                                tbl["e_urows"], valid, axis, nrows)
+                for f in fields]
+
+    def recv_valid(tbl, row_act, is_final):
+        """Receiver-side slot validity: full cut on the final trip, active
+        rows only in between (the packed send side always ships the whole
+        static bucket — validity decides what lands)."""
+        full = tbl["e_valid"]
+        if not activity_aware:
+            return full
+        rows = tbl["e_unpack"] if mode == "ppermute" else tbl["e_urows"]
+        return jnp.where(is_final, full, full * row_act[rows])
+
+    def fold_values(acc, row, live):
+        """Live-gated fold of one metrics value row per ``_V_ACCUM``
+        (dmetrics.combine is unconditional — a dead trip's garbage row
+        must not leak into last/max/min columns)."""
+        upd_sum = acc + jnp.where(live, row, 0.0)
+        upd_last = jnp.where(live, row, acc)
+        upd_max = jnp.maximum(acc, jnp.where(live, row, -jnp.inf))
+        upd_min = jnp.minimum(acc, jnp.where(live, row, jnp.inf))
+        return jnp.where(v_sum, upd_sum,
+                         jnp.where(v_last, upd_last,
+                                   jnp.where(v_max, upd_max, upd_min)))
+
+    def body(state, tables, scalars):
+        blk = {k: v[0] for k, v in state.items()}
+        tbl = {k: v[0] for k, v in tables.items()}
+        dt_max = scalars["dt_max"][0]
+        depth = scalars["depth"][0]
+        nsub_dyn = scalars["nsub"][0]
+        u_floor = scalars["u_floor"][0]
+        # dt_min = dt_max / 2**depth: exact power-of-two scaling, so the
+        # traced product k·dt_min below is the correctly-rounded f32 of the
+        # host's f64 computation (nsub is a power of two)
+        dt_min = dt_max * jnp.exp2(-depth.astype(jnp.float32))
+        tz = jnp.asarray(tz_np)
+        ci, cj, pmask = tbl["ci"], tbl["cj"], tbl["pmask"]
+        pairs = PairList(ci=ci, cj=cj, shift=tbl["shift"])
+        cap = int(blk["mass"].shape[1])
+        fdt = blk["pos"].dtype
+
+        st0 = TimeBinState(
+            cells=ParticleCells(pos=blk["pos"], vel=blk["vel"],
+                                mass=blk["mass"], u=blk["u"], h=blk["h"],
+                                mask=blk["mask"]),
+            accel=blk["accel"], dudt=blk["dudt"], rho=blk["rho"],
+            omega=blk["omega"], bins=blk["bins"], t_start=blk["t_start"],
+            time=blk["time"])
+        cnt0 = {k: jnp.zeros((), jnp.int32)
+                for k in ("updates", "pair_tasks", "force_substeps",
+                          "exported", "live_trips")}
+        met_c0 = jnp.zeros((len(dmetrics.COUNT_COLUMNS),), jnp.int32)
+        met_v0 = jnp.zeros((len(dmetrics.VALUE_COLUMNS),), jnp.float32)
+        met_v0 = met_v0.at[dmetrics.VALUE_INDEX["min_rho"]].set(jnp.inf)
+
+        def trip(carry, n):
+            st, drifted_to, cnt, met_c, met_v = carry
+            mask = st.cells.mask
+            maskb = mask > 0
+            level = jnp.maximum(depth - tz[n], 0)
+            is_final = n == nsub_dyn
+            # ---- wake floor from the live bins (host _wake_floor)
+            deep = jnp.max(jnp.where(maskb, st.bins, _NEG_INF_BIN), axis=1)
+            nb = deep
+            nb = nb.at[ci].max(jnp.where(pmask > 0, deep[cj], _NEG_INF_BIN))
+            nb = nb.at[cj].max(jnp.where(pmask > 0, deep[ci], _NEG_INF_BIN))
+            wake_own = jnp.maximum(nb - bin_delta, 0).astype(jnp.int32)
+            # full-cut exchange: halo rows take their owner's wake floor
+            # (owned rows' stencils are complete — every pair touching an
+            # owned cell is in the touch table)
+            (wake,) = xchg(tbl, [wake_own], tbl["e_valid"])
+            # ---- activity (host substep_active_mask / final mask)
+            sub_act = ((st.bins >= level) | (st.bins < wake[:, None])
+                       ) & maskb
+            active = jnp.where(is_final, mask, sub_act.astype(fdt))
+            row_act = jnp.any(sub_act, axis=1).astype(fdt)
+            glob_act = jax.lax.psum(jnp.sum(sub_act[:K]).astype(jnp.int32),
+                                    axis)
+            live = ((glob_act > 0) | is_final) & (n <= nsub_dyn)
+            # ---- lazy drift of everything since the last live trip
+            kdt = (n - drifted_to).astype(jnp.float32) * dt_min
+            std = _drift(st, kdt, box=box)
+            # ---- density + exchange 1 + split force (as the fused path,
+            # with the static tables gated by this trip's activity)
+            pm = jnp.where(is_final, pmask,
+                           pmask * jnp.maximum(row_act[ci], row_act[cj]))
+            rho, om, pr, cs = _substep_density_phase(std, pairs, pm,
+                                                     active, cfg=cfg)
+            ev = recv_valid(tbl, row_act, is_final)
+            rho2, om2, pr2, cs2 = xchg(tbl, [rho, om, pr, cs], ev)
+            dv, du = _split_force_pass(
+                std.cells, pairs, pm, (rho, pr, om, cs),
+                (rho2, pr2, om2, cs2), tbl["int_pos"], tbl["int_valid"],
+                tbl["cut_pos"], tbl["cut_valid"], cfg=cfg)
+            # ---- interior and final kicks, merged by where
+            stF, kickedF = _apply_force_kick(
+                std, sub_act.astype(fdt), dv, du, rho2, om2, wake, dt_max,
+                depth, u_floor, cfg=cfg)
+            stL = _apply_final_kick(std, dv, du, rho2, om2, dt_max, cfg=cfg)
+            stK = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(is_final, a, b), stL, stF)
+            # ---- exchange 2: kicked state -> replicas. Unlike the host
+            # ladder this also runs on the final trip (full validity), so
+            # halo replicas enter the next cycle of a K>1 segment current;
+            # owned rows are untouched by construction.
+            vel, uu, bb, ts, ac, dd = xchg(
+                tbl, [stK.cells.vel, stK.cells.u, stK.bins, stK.t_start,
+                      stK.accel, stK.dudt], ev)
+            stN = stK._replace(cells=stK.cells._replace(vel=vel, u=uu),
+                               bins=bb, t_start=ts, accel=ac, dudt=dd)
+            # ---- counters (owned partial sums; the driver psums on host)
+            live32 = live.astype(jnp.int32)
+            n_upd = jnp.where(is_final, jnp.sum(maskb[:K]),
+                              jnp.sum(sub_act[:K])).astype(jnp.int32)
+            n_pair = jnp.sum((pm > 0) & (tbl["own_pair"] > 0)
+                             ).astype(jnp.int32)
+            n_slots = jnp.sum(ev > 0).astype(jnp.int32)
+            cnt_new = {
+                "updates": cnt["updates"] + live32 * n_upd,
+                "pair_tasks": cnt["pair_tasks"] + live32 * n_pair,
+                "force_substeps": cnt["force_substeps"]
+                + (live & ~is_final).astype(jnp.int32),
+                "exported": cnt["exported"] + live32 * n_slots,
+                "live_trips": cnt["live_trips"] + live32,
+            }
+            # ---- telemetry row (mirrors build_fused_substep_program)
+            deepened = jnp.where(is_final, 0,
+                                 jnp.sum(bb[:K] != st.bins[:K])
+                                 ).astype(jnp.int32)
+            woken = jnp.where(is_final, 0, jnp.sum(wake > level)
+                              ).astype(jnp.int32)
+            nexch = jnp.where(is_final, 1, 2)
+            slot_bytes = jnp.where(is_final, 4 * cap * 4,
+                                   (4 + 10) * cap * 4)
+            kicked = jnp.where(
+                is_final,
+                jnp.sum((active > 0) & maskb).astype(jnp.int32), kickedF)
+            mrow_c, mrow_v = dmetrics.measure_substep(
+                mask=stN.cells.mask[:K], active=active[:K],
+                vel=stN.cells.vel[:K], u=stN.cells.u[:K],
+                mass=stN.cells.mass[:K], rho=stN.rho[:K],
+                live_pairs=jnp.sum(pm),
+                pair_int=jnp.sum(jnp.where(tbl["int_valid"] > 0,
+                                           pm[tbl["int_pos"]], 0.0)
+                                 ).astype(jnp.int32),
+                pair_cut=jnp.sum(jnp.where(tbl["cut_valid"] > 0,
+                                           pm[tbl["cut_pos"]], 0.0)
+                                 ).astype(jnp.int32),
+                exch_slots=n_slots * nexch,
+                exch_bytes=n_slots * slot_bytes,
+                deepened=deepened, woken=woken, kicked=kicked)
+            met_c_new = met_c + jnp.where(live, mrow_c, 0)
+            met_v_new = fold_values(met_v, mrow_v, live)
+            # ---- dead trips keep every carry bit-identical
+            stO = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(live, new, old), stN, st)
+            drifted_new = jnp.where(live, n, drifted_to)
+            return (stO, drifted_new, cnt_new, met_c_new, met_v_new), None
+
+        xs = jnp.arange(1, nsub_static + 1, dtype=jnp.int32)
+        carry0 = (st0, jnp.int32(0), cnt0, met_c0, met_v0)
+        if _SCAN_UNROLL:        # debug hook: straight-line trips
+            carry = carry0
+            for n in range(1, nsub_static + 1):
+                carry, _ = trip(carry, jnp.int32(n))
+            stE, _, cnt, met_c, met_v = carry
+        else:
+            (stE, _, cnt, met_c, met_v), _ = jax.lax.scan(
+                trip, carry0, xs, unroll=nsub_static)
+        out = {k: getattr(stE.cells, k) for k in STATE_CELL_FIELDS}
+        out.update({k: getattr(stE, k) for k in STATE_AUX_FIELDS})
+        out["time"] = stE.time
+        cnt_out = {k: v[None] for k, v in cnt.items()}
+        cnt_out["t_end"] = stE.time[None]
+        met = {"counts": met_c[None], "values": met_v[None]}
+        return ({k: v[None] for k, v in out.items()}, cnt_out, met)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),
+                   out_specs=(P(axis), P(axis), P(axis)), check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def build_plan_program(mesh, axis: str, *, mode: str,
+                       rounds: Sequence[Sequence[Tuple[int, int]]],
+                       nrows: int, K: int, cfg, box: float,
+                       ncells_side: int, max_depth: int, bin_delta: int,
+                       depth_headroom: int, nsub_static: int,
+                       dt_max_static: Optional[float] = None):
+    """Compile the between-cycles prologue of a K>1 device segment.
+
+    Everything ``TimeBinSimulation._plan_cycle`` + the distributed
+    prologue do on the host — signal-velocity CFL field, bin assignment,
+    neighbour-limiter fixpoint, cycle depth, u_floor, opening half-kick —
+    expressed over the resident extended blocks, plus the two segment
+    sentinels the scanned path needs:
+
+    * ``crossed``: any owned particle's cell id (identical f32 op sequence
+      as ``cellgrid.bin_particles``) differs from its resident row's cell —
+      the host epilogue's re-bin would have changed the layout, so the
+      segment must abort and replay host-scheduled;
+    * ``capacity``: the new cycle wants more sub-steps than the compiled
+      scan's static ladder (deepening beyond headroom) — same abort.
+
+    Bitwise notes: every reduction is either order-free (min/max/compare)
+    or the pinned tree fold (u_floor via all_gather + a static global
+    row-gather), and the scalar chain reproduces the host's f32 rounding
+    (verified by the conformance rows). The limiter runs as a
+    ``while_loop`` Jacobi iteration with a full-cut exchange and a psum'd
+    convergence test per sweep — the same monotone fixpoint the host
+    reaches. Not donated: only four fields come back, the rest of the
+    resident buffers stay live.
+    """
+    perms = [list(rnd) for rnd in rounds]
+    cell_size = box / ncells_side
+
+    def xchg_full(tbl, fields):
+        if mode == "ppermute":
+            return [_permute_copy(f, tbl["e_pack"], tbl["e_unpack"],
+                                  tbl["e_valid"], perms, axis, nrows)
+                    for f in fields]
+        return [_allgather_copy(f, tbl["e_pack"], tbl["e_usrc"],
+                                tbl["e_urows"], tbl["e_valid"], axis,
+                                nrows) for f in fields]
+
+    def body(state, tables, consts):
+        blk = {k: v[0] for k, v in state.items()}
+        tbl = {k: v[0] for k, v in tables.items()}
+        gidx = consts["gather_idx"]
+        pos, vel, mass = blk["pos"], blk["vel"], blk["mass"]
+        u, h, mask = blk["u"], blk["h"], blk["mask"]
+        maskb = mask > 0
+        cap = int(mass.shape[1])
+        ci, cj, pmask = tbl["ci"], tbl["cj"], tbl["pmask"]
+
+        # ---- crossing sentinel (cellgrid.bin_particles' id math)
+        posw = jnp.mod(pos, box)
+        idx3 = jnp.floor(posw / cell_size).astype(jnp.int32)
+        idx3 = jnp.clip(idx3, 0, ncells_side - 1)
+        cellid = (idx3[..., 0] * ncells_side + idx3[..., 1]) * ncells_side \
+            + idx3[..., 2]
+        crossed = jax.lax.psum(
+            jnp.sum((cellid[:K] != tbl["rowcell"][:K, None]) & maskb[:K]
+                    ).astype(jnp.int32), axis)
+
+        # ---- signal-velocity CFL field (timebins._signal_speeds)
+        cs = sound_speed(jnp.ones_like(u), u, cfg.gamma)
+        v = speed_norm(vel)
+        speed = jnp.where(maskb, cs + v, 0.0)
+        s_cell = jnp.max(speed, axis=1)
+        s_nb = s_cell
+        s_nb = s_nb.at[ci].max(jnp.where(pmask > 0, s_cell[cj], 0.0))
+        s_nb = s_nb.at[cj].max(jnp.where(pmask > 0, s_cell[ci], 0.0))
+        dts = cfg.cfl * h / jnp.maximum(s_nb[:, None], 1e-12)
+        dts = jnp.where(maskb, dts, jnp.inf)
+        dt_min_req = jax.lax.pmin(jnp.min(dts[:K]), axis)
+        if dt_max_static is not None:
+            dt_max_c0 = jnp.float32(dt_max_static)
+        else:
+            dt_max_c0 = jax.lax.pmax(
+                jnp.max(jnp.where(maskb[:K], dts[:K], -jnp.inf)), axis)
+        dt_max_c = jnp.minimum(jnp.float32(dt_max_c0),
+                               jnp.float32(dt_min_req)
+                               * jnp.float32(2.0 ** max_depth))
+
+        # ---- bin assignment + neighbour limiter fixpoint
+        bins0 = assign_bins(dts, dt_max_c, max_depth)
+        bins0 = jnp.where(maskb, bins0, 0).astype(jnp.int32)
+        deep0 = jnp.max(jnp.where(maskb, bins0, _NEG_INF_BIN), axis=1)
+        # halo rows' locally-computed deep/bins are incomplete (their
+        # stencil is only complete on their owner); exchange before and
+        # inside every sweep so halos always mirror owners
+        (deep0,) = xchg_full(tbl, [deep0])
+
+        def lim_cond(sv):
+            i, _, ch = sv
+            return (i < 256) & (ch > 0)
+
+        def lim_step(sv):
+            i, deep, _ = sv
+            nb = deep
+            nb = nb.at[ci].max(jnp.where(pmask > 0, deep[cj],
+                                         _NEG_INF_BIN))
+            nb = nb.at[cj].max(jnp.where(pmask > 0, deep[ci],
+                                         _NEG_INF_BIN))
+            new = jnp.maximum(deep, nb - bin_delta)
+            (newx,) = xchg_full(tbl, [new])
+            ch = jax.lax.psum(jnp.sum((newx[:K] != deep[:K])
+                                      ).astype(jnp.int32), axis)
+            return (i + 1, newx, ch)
+
+        _, deep, _ = jax.lax.while_loop(
+            lim_cond, lim_step, (jnp.int32(0), deep0, jnp.int32(1)))
+        nb = deep
+        nb = nb.at[ci].max(jnp.where(pmask > 0, deep[cj], _NEG_INF_BIN))
+        nb = nb.at[cj].max(jnp.where(pmask > 0, deep[ci], _NEG_INF_BIN))
+        floor = jnp.clip(nb - bin_delta, 0, max_depth)
+        bins1 = jnp.where(maskb, jnp.maximum(bins0, floor[:, None]), bins0)
+        bins1 = jnp.where(maskb, bins1, 0).astype(jnp.int32)
+        (bins,) = xchg_full(tbl, [bins1])
+
+        occ = jnp.maximum(jax.lax.pmax(
+            jnp.max(jnp.where(maskb[:K], bins[:K], _NEG_INF_BIN)), axis), 0)
+        depth = jnp.minimum(occ + depth_headroom, max_depth
+                            ).astype(jnp.int32)
+        nsub = jnp.left_shift(jnp.int32(1), depth)
+        over = (nsub > nsub_static).astype(jnp.int32)
+        # owned-bin histogram, psum'd: the host-side cycle stats' bin_hist
+        # without pulling the bins array
+        levels = jnp.arange(max_depth + 1, dtype=jnp.int32)
+        hist = jax.lax.psum(
+            jnp.sum((bins[:K][..., None] == levels) & maskb[:K][..., None],
+                    axis=(0, 1)).astype(jnp.int32), axis)
+
+        # ---- u_floor: pinned tree fold over the global (ncells, cap)
+        # reconstruction (all_gather + static row gather), bitwise equal
+        # to the host prologue's mass_weighted_mean_u
+        mm = (mass * mask)[:K]
+        gm = jax.lax.all_gather(mm, axis).reshape(-1, cap)[gidx]
+        gu = jax.lax.all_gather(u[:K], axis).reshape(-1, cap)[gidx]
+        u_floor = mass_weighted_mean_u(gm, gu)
+
+        # ---- opening half-kick with the new bins (timebins._cycle_start)
+        st = TimeBinState(
+            cells=ParticleCells(pos=pos, vel=vel, mass=mass, u=u, h=h,
+                                mask=mask),
+            accel=blk["accel"], dudt=blk["dudt"], rho=blk["rho"],
+            omega=blk["omega"], bins=bins, t_start=blk["t_start"],
+            time=blk["time"])
+        st2 = _cycle_start(st, dt_max_c, cfg=cfg)
+
+        upd = {"bins": bins[None], "vel": st2.cells.vel[None],
+               "u": st2.cells.u[None], "t_start": st2.t_start[None]}
+        scal = {"dt_max": dt_max_c[None], "depth": depth[None],
+                "nsub": nsub[None], "u_floor": jnp.float32(u_floor)[None]}
+        flags = {"crossed": crossed[None], "capacity": over[None],
+                 "hist": hist[None]}
+        return upd, scal, flags
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), P()),
+                   out_specs=(P(axis), P(axis), P(axis)), check_rep=False)
+    return jax.jit(fn)
 
 
 class CollectiveTransport(Transport):

@@ -78,7 +78,9 @@ from .engine import SPHConfig, build_taskgraph
 from .timebins import (STATE_AUX_FIELDS, STATE_CELL_FIELDS,
                        TimeBinSimulation, TimeBinState, _final_force_phase,
                        _substep_density_phase, _substep_force_phase,
-                       active_level, cell_bin_histogram, substep_active_mask)
+                       active_level, cell_bin_histogram,
+                       mass_weighted_mean_u, substep_active_mask,
+                       trailing_zeros_table)
 
 _PAD_H = 1e-6          # padded-slot smoothing length (division-safe)
 
@@ -242,6 +244,8 @@ class DistTimeBinSimulation(TimeBinSimulation):
                  transport: str = "host",
                  transport_mode: str = "auto",
                  residency: str = "host",
+                 schedule: str = "host",
+                 segment_cycles: int = 1,
                  **kw):
         if transport not in TRANSPORTS:
             raise ValueError(f"transport must be one of {TRANSPORTS}, "
@@ -261,7 +265,23 @@ class DistTimeBinSimulation(TimeBinSimulation):
                     "residency='device' compiles the vmap pair phases "
                     "into the fused shard_map programs; use_pallas=True "
                     "is not supported on this path yet")
+        if schedule not in ("host", "device"):
+            raise ValueError(f"schedule must be 'host' or 'device', "
+                             f"got {schedule!r}")
+        if schedule == "device" and residency != "device":
+            raise ValueError(
+                "schedule='device' derives the sub-step ladder inside the "
+                "compiled segment program from the device-resident bins "
+                "array and therefore requires residency='device'")
+        if int(segment_cycles) < 1:
+            raise ValueError("segment_cycles must be >= 1")
+        if int(segment_cycles) > 1 and schedule != "device":
+            raise ValueError(
+                "segment_cycles > 1 fuses consecutive cycles into one "
+                "device segment and requires schedule='device'")
         self.residency = residency
+        self.schedule = schedule
+        self.segment_cycles = int(segment_cycles)
         self.nranks = int(nranks)
         self.activity_aware = bool(activity_aware)
         self.repartition_threshold = float(repartition_threshold)
@@ -314,6 +334,14 @@ class DistTimeBinSimulation(TimeBinSimulation):
         self.device_metrics_last: Optional[Tuple[np.ndarray,
                                                  np.ndarray]] = None
         self.device_metrics_pulls = 0
+        # schedule="device": whole K-cycle segments run as compiled
+        # programs; run_cycle() pops one cycle's stats per call from this
+        # queue. A segment aborts back to the host-scheduled ladder
+        # (bitwise-recoverably) when a health sentinel or capacity/crossing
+        # flag trips.
+        self._segment_queue: List[Dict] = []
+        self.segments = 0
+        self.segment_aborts = 0
 
     # ------------------------------------------------------- jitted phases
     @staticmethod
@@ -516,6 +544,24 @@ class DistTimeBinSimulation(TimeBinSimulation):
         if tr.enabled:
             tr.ctx["cycle"] = self.cycle_index
             tr.ctx.pop("substep", None)
+        if self.schedule == "device":
+            # device-scheduled: whole K-cycle segments run as compiled
+            # programs; each run_cycle() call pops one cycle's stats
+            if not self._segment_queue:
+                with tr.timed("cycle") as seg:
+                    self._segment_queue = self._run_segment()
+                per_cycle_wall = seg.elapsed / max(len(self._segment_queue),
+                                                   1)
+                for s in self._segment_queue:
+                    s["wall"] = per_cycle_wall
+            stats = self._segment_queue.pop(0)
+            if "_met" in stats:
+                # the row travelled in the segment_stats boundary pull —
+                # adopting it here is free (no extra transfer entry)
+                self.device_metrics_last = stats.pop("_met")
+                self.device_metrics_pulls += 1
+            self.cycle_index += 1
+            return stats
         with tr.timed("cycle") as cyc:
             ctx = self._cycle_prologue()
             if self.residency == "device":
@@ -539,8 +585,11 @@ class DistTimeBinSimulation(TimeBinSimulation):
         bins_host = np.asarray(self.state.bins)
         mask_host = np.asarray(self.state.cells.mask)
         m_h = np.asarray(self.state.cells.mass * self.state.cells.mask)
-        u_floor = float((m_h * np.asarray(self.state.cells.u)).sum()
-                        / max(m_h.sum(), 1e-30))
+        # fixed-shape tree fold (timebins.mass_weighted_mean_u): the same
+        # reduction order the device plan program reproduces, so the
+        # host- and device-derived schedules agree bit for bit
+        u_floor = float(mass_weighted_mean_u(m_h,
+                                             np.asarray(self.state.cells.u)))
         hist = np.bincount(bins_host[mask_host > 0], minlength=depth + 1)
         # opening half-kick on the global mirror, then scatter to ranks
         self.state = self._jit_start(self.state, jnp.float32(dt_max_c))
@@ -1214,3 +1263,292 @@ class DistTimeBinSimulation(TimeBinSimulation):
                 "force_substeps": force_substeps,
                 "cycle_exported": cycle_exported,
                 "cycle_full": cycle_full}
+
+    # ---------------------------------------------- device-scheduled segments
+    def _segment_tables(self, plan: RankPlan
+                        ) -> Tuple[Dict[str, jax.Array],
+                                   Dict[str, jax.Array], Tuple]:
+        """Static control tables of one device-scheduled segment.
+
+        Unlike :meth:`_fused_tables` these are activity-*independent*: the
+        full touch-pair set per rank (compacted in ascending global pair
+        order — the same subsequence every per-level host table is a
+        restriction of, so masked scatters fold identical contribution
+        sequences), the full-cut exchange tables, and the schedule-deriving
+        side tables (per-rank pair ownership for global pair counting, row
+        cell ids for the crossing sentinel, the global row gather for
+        u_floor). One upload per segment, ledgered as a *boundary*
+        transfer: the scanned path has zero intra-segment entries by
+        construction.
+        """
+        t = self._transport
+        nranks, nrows = plan.nranks, plan.K + plan.H
+        idxs, nmax = self._select_rank_pairs(plan, None)
+        splits = []
+        imax, cmax = 1, 1
+        for r in range(nranks):
+            idx = idxs[r]
+            halo_pair = ((plan.ci_ext[r][idx] >= plan.K)
+                         | (plan.cj_ext[r][idx] >= plan.K))
+            splits.append(halo_pair)
+            imax = max(imax, int((~halo_pair).sum()))
+            cmax = max(cmax, int(halo_pair.sum()))
+        # static demand (the full touch set) -> plain next_pow2 buckets;
+        # the signature only moves when the partition does
+        B, Bi, Bc = next_pow2(nmax), next_pow2(imax), next_pow2(cmax)
+
+        ci = np.zeros((nranks, B), np.int32)
+        cj = np.zeros((nranks, B), np.int32)
+        shift = np.zeros((nranks, B, 3), self._shift.dtype)
+        pmask = np.zeros((nranks, B), np.float32)
+        own_pair = np.zeros((nranks, B), np.float32)
+        int_pos = np.zeros((nranks, Bi), np.int32)
+        int_valid = np.zeros((nranks, Bi), np.float32)
+        cut_pos = np.zeros((nranks, Bc), np.int32)
+        cut_valid = np.zeros((nranks, Bc), np.float32)
+        rowcell = np.full((nranks, nrows), -1, np.int32)
+        for r in range(nranks):
+            idx, halo_pair = idxs[r], splits[r]
+            nlive = len(idx)
+            idxp = np.concatenate(
+                [idx, np.zeros(B - nlive, dtype=idx.dtype)])
+            ci[r] = plan.ci_ext[r][idxp]
+            cj[r] = plan.cj_ext[r][idxp]
+            shift[r] = self._shift[idxp]
+            pmask[r, :nlive] = 1.0
+            # a pair is counted by the rank owning its ci cell — a
+            # partition of the global pair list, so the psum of live own
+            # pairs equals the host's global live-pair count
+            own_pair[r, :nlive] = (
+                self._assignment[self._ci[idx]] == r).astype(np.float32)
+            ipos = np.nonzero(~halo_pair)[0]
+            cpos = np.nonzero(halo_pair)[0]
+            int_pos[r, :len(ipos)] = ipos
+            int_valid[r, :len(ipos)] = 1.0
+            cut_pos[r, :len(cpos)] = cpos
+            cut_valid[r, :len(cpos)] = 1.0
+            own, hal = plan.owned[r], plan.halo[r]
+            rowcell[r, :len(own)] = own
+            rowcell[r, plan.K:plan.K + len(hal)] = hal
+
+        tables = {"ci": ci, "cj": cj, "shift": shift, "pmask": pmask,
+                  "own_pair": own_pair, "int_pos": int_pos,
+                  "int_valid": int_valid, "cut_pos": cut_pos,
+                  "cut_valid": cut_valid, "rowcell": rowcell}
+        slots = plan.ship_slots(list(plan.cut)) if plan.cut else ShipSlots()
+        if t.mode == "ppermute":
+            Be = next_pow2(max(slots.max_edge_slots, 1))
+            pack, unpack, valid = pack_rounds(t.rounds, slots, nranks, Be)
+            tables.update(e_pack=pack, e_unpack=unpack, e_valid=valid)
+            exch_sig = ("ppermute", Be, t._perms_sig)
+        else:
+            Bo = next_pow2(max(slots.max_rank_exports(nranks), 1))
+            Bn = next_pow2(max(slots.max_rank_imports(nranks), 1))
+            pack, usrc, urows, valid = pack_allgather(slots, nranks, Bo, Bn)
+            tables.update(e_pack=pack, e_usrc=usrc, e_urows=urows,
+                          e_valid=valid)
+            exch_sig = ("allgather", Bo, Bn)
+        # global cell c lives at flattened all_gather row
+        # owner_rank * K + owner_row (the plan program's u_floor gather)
+        gidx = np.zeros(self.spec.ncells, np.int32)
+        for r in range(nranks):
+            own = plan.owned[r]
+            if len(own):
+                gidx[own] = r * plan.K + np.arange(len(own), dtype=np.int32)
+        consts = {"gather_idx": gidx}
+        self.transfers.record(
+            "segment_tables",
+            sum(a.nbytes for a in tables.values()) + gidx.nbytes,
+            boundary=True)
+        sh = self._mesh_sharding()
+        tables = {k: jax.device_put(jnp.asarray(v), sh)
+                  for k, v in tables.items()}
+        consts = {k: jnp.asarray(v) for k, v in consts.items()}
+        sig = (nranks, nrows, plan.K, B, Bi, Bc, exch_sig)
+        return tables, consts, sig
+
+    def _cycle_scan_program(self, sig: Tuple, nsub_static: int):
+        from .collectives import build_cycle_scan_program
+        t = self._transport
+        nrows, K = sig[1], sig[2]
+        key = ("cycle_scan", nsub_static, self.activity_aware) + sig \
+            + (t.mode,)
+        return t.programs.get(key, lambda: build_cycle_scan_program(
+            t.mesh, t.axis, mode=t.mode, rounds=t.rounds, nrows=nrows, K=K,
+            cfg=self.cfg, box=self.box, nsub_static=nsub_static,
+            bin_delta=self.bin_delta,
+            activity_aware=self.activity_aware))
+
+    def _plan_program(self, sig: Tuple, nsub_static: int):
+        from .collectives import build_plan_program
+        t = self._transport
+        nrows, K = sig[1], sig[2]
+        key = ("segment_plan", nsub_static, self.dt_max) + sig + (t.mode,)
+        return t.programs.get(key, lambda: build_plan_program(
+            t.mesh, t.axis, mode=t.mode, rounds=t.rounds, nrows=nrows, K=K,
+            cfg=self.cfg, box=self.box,
+            ncells_side=self.spec.ncells_side, max_depth=self.max_depth,
+            bin_delta=self.bin_delta, depth_headroom=self.depth_headroom,
+            nsub_static=nsub_static, dt_max_static=self.dt_max))
+
+    def _place_scalars(self, vals: Dict[str, np.ndarray]
+                       ) -> Dict[str, jax.Array]:
+        sh = self._mesh_sharding()
+        self.transfers.record(
+            "segment_tables",
+            sum(np.asarray(v).nbytes for v in vals.values()), boundary=True)
+        return {k: jax.device_put(jnp.asarray(v), sh)
+                for k, v in vals.items()}
+
+    def _run_segment(self) -> List[Dict]:
+        """Run one device-scheduled segment of ``segment_cycles`` cycles.
+
+        Cycle 1 is planned by the host prologue (it also sizes the static
+        scan ladder); each further cycle is planned *on device* by the
+        plan program, its scalars flowing device-to-device. Between the
+        initial scatter and the final gather the host moves zero state or
+        schedule bytes — one boundary upload of the static tables, one
+        boundary pull of the per-cycle counters/flags at the end
+        (``TransferProbe`` shows no intra-segment entries at all). If a
+        health sentinel (NaN/Inf/neg-rho), a cell crossing or a
+        capacity-overflow flag tripped, the pre-segment state is restored
+        and the segment replays on the host-scheduled ladder —
+        bitwise-recoverable by the residency conformance contract.
+        """
+        K_cycles = self.segment_cycles
+        stash = self.state
+        ctx = self._cycle_prologue()
+        plan: RankPlan = ctx["plan"]
+        nsub_static = ctx["nsub"]
+        res = self._scatter_resident(plan)
+        tables, consts, sig = self._segment_tables(plan)
+        cyc_prog = self._cycle_scan_program(sig, nsub_static)
+        self.program_keys.add(("cycle_scan", ctx["depth"], sig[3]))
+        plan_prog = self._plan_program(sig, nsub_static) \
+            if K_cycles > 1 else None
+        if plan_prog is not None:
+            self.program_keys.add(("segment_plan", ctx["depth"], sig[3]))
+        scalars = self._place_scalars({
+            "dt_max": np.full(plan.nranks, ctx["dt_max_c"], np.float32),
+            "depth": np.full(plan.nranks, ctx["depth"], np.int32),
+            "nsub": np.full(plan.nranks, ctx["nsub"], np.int32),
+            "u_floor": np.full(plan.nranks, ctx["u_floor"], np.float32)})
+        names = self._CELL_FIELDS + self._AUX_FIELDS + ("time",)
+        per_cnt, per_met, per_scal, per_flags = [], [], [scalars], []
+        for j in range(K_cycles):
+            if j > 0:
+                state_in = {nm: res[nm] for nm in names}
+                upd, scalars, flags = plan_prog(state_in, tables, consts)
+                res.update(upd)
+                per_scal.append(scalars)
+                per_flags.append(flags)
+            state_in = {nm: res[nm] for nm in names}
+            out_state, cnt, met = cyc_prog(state_in, tables, scalars)
+            res.update(out_state)
+            per_cnt.append(cnt)
+            per_met.append(met)
+        # ---- ONE boundary pull: every cycle's counters, metrics rows,
+        # device-planned scalars and sentinel flags
+        pulled_cnt = [{k: np.asarray(v) for k, v in c.items()}
+                      for c in per_cnt]
+        pulled_met = [(np.asarray(m["counts"]), np.asarray(m["values"]))
+                      for m in per_met]
+        pulled_scal = [{k: np.asarray(v) for k, v in s.items()}
+                       for s in per_scal]
+        pulled_flags = [{k: np.asarray(v) for k, v in f.items()}
+                        for f in per_flags]
+        nbytes = sum(a.nbytes for grp in pulled_cnt for a in grp.values())
+        nbytes += sum(c.nbytes + v.nbytes for c, v in pulled_met)
+        nbytes += sum(a.nbytes for grp in pulled_scal for a in grp.values())
+        nbytes += sum(a.nbytes for grp in pulled_flags
+                      for a in grp.values())
+        self.transfers.record("segment_stats", nbytes, boundary=True)
+        self.segments += 1
+
+        mci = dmetrics.COUNT_INDEX
+        sentinels = sum(
+            int(c[:, mci["flag_nan"]].sum() + c[:, mci["flag_inf"]].sum()
+                + c[:, mci["flag_neg_rho"]].sum())
+            for c, _ in pulled_met)
+        crossed = sum(int(f["crossed"][0]) for f in pulled_flags)
+        over = sum(int(f["capacity"][0]) for f in pulled_flags)
+        if sentinels or crossed or over:
+            # sentinel trip: discard the segment (the flagged program's
+            # interior state is garbage by contract), restore the
+            # pre-segment state and replay host-scheduled — bitwise
+            # identical to the reference ladder, NaNs included
+            self.segment_aborts += 1
+            self.state = stash
+            return self._replay_segment_host(K_cycles)
+
+        self._gather_resident(plan, res)
+        depth_last = int(pulled_scal[-1]["depth"][0])
+        self._maybe_repartition(np.asarray(self.state.bins),
+                                np.asarray(self.state.cells.mask),
+                                depth_last)
+        if self.rebin_each_cycle:
+            with self.tracer.span("rebin", units=ctx["nreal"]):
+                self._rebin_state()
+
+        nreal = ctx["nreal"]
+        cut_slots = plan.cut_slots
+        self.halo_log = []      # per-sub-step log is host-side only
+        dm_on = self.device_metrics_enabled
+        stats_list: List[Dict] = []
+        for j in range(K_cycles):
+            cnt, scal = pulled_cnt[j], pulled_scal[j]
+            dt_max_j = float(scal["dt_max"][0])
+            depth_j = int(scal["depth"][0])
+            nsub_j = int(scal["nsub"][0])
+            updates_j = int(cnt["updates"].sum())
+            pair_j = int(cnt["pair_tasks"].sum())
+            fs_j = int(cnt["force_substeps"][0])
+            exported_j = int(cnt["exported"].sum())
+            full_j = int(cnt["live_trips"][0]) * cut_slots
+            self.particle_updates += updates_j
+            self.global_equiv_updates += nsub_j * nreal
+            self.substeps += nsub_j
+            self.halo_exported_slots += exported_j
+            self.halo_full_slots += full_j
+            if j == 0:
+                hist_j = ctx["hist"]
+            else:
+                hist_j = pulled_flags[j - 1]["hist"][0, :depth_j + 1]
+            stats = {
+                "t": float(cnt["t_end"][0]),
+                "dt_max": dt_max_j,
+                "depth": depth_j,
+                "substeps": nsub_j,
+                "force_substeps": fs_j + 1,
+                "bin_hist": np.asarray(hist_j),
+                "updates": updates_j,
+                "global_equiv_updates": nsub_j * nreal,
+                "pair_tasks": pair_j,
+                "global_equiv_pair_tasks": nsub_j * len(self._ci),
+                "halo_exported_slots": exported_j,
+                "halo_full_slots": full_j,
+                "nranks": plan.nranks,
+                "residency": self.residency,
+                "schedule": "device",
+                "segment_cycles": K_cycles,
+            }
+            if dm_on:
+                stats["_met"] = pulled_met[j]
+            stats_list.append(stats)
+        if not dm_on:
+            self.device_metrics_last = None
+        return stats_list
+
+    def _replay_segment_host(self, K_cycles: int) -> List[Dict]:
+        """Abort path: re-run the segment's cycles on the host-scheduled
+        device-resident ladder (the conformance-pinned reference path)."""
+        out = []
+        for _ in range(K_cycles):
+            ctx = self._cycle_prologue()
+            body = self._cycle_substeps_device(ctx)
+            stats = self._cycle_epilogue(ctx, body)
+            stats["schedule"] = "device"
+            stats["segment_cycles"] = K_cycles
+            stats["replayed"] = True
+            out.append(stats)
+        return out

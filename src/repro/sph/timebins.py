@@ -72,19 +72,33 @@ def particle_timesteps(cells: ParticleCells, dudt, *, gamma: float,
 
 
 # ------------------------------------------------------------------ bin math
-def assign_bins(dt, dt_max: float, max_bin: int):
+# Quantisation thresholds for assign_bins: ratio > _BIN_THRESHOLDS[k-1] puts
+# a particle at least in bin k. Precomputed in float64 and rounded once to
+# float32 so the decision is a pure f32 comparison — numpy and XLA disagree
+# in the last ulp of log2 (the original formulation), and a bin flipping
+# between host- and device-computed plans breaks the bitwise-parity contract
+# of the device-scheduled path. The 1e-6 slack keeps the historical
+# behaviour that dt == dt_max/2**k lands exactly in bin k.
+BIN_LADDER_MAX = 24
+_BIN_THRESHOLDS = np.asarray(
+    2.0 ** (np.arange(BIN_LADDER_MAX) + 1e-6), np.float32)
+
+
+def assign_bins(dt, dt_max, max_bin):
     """Quantise per-particle time-steps onto the power-of-two ladder.
 
     Returns the smallest b with dt_max / 2**b ≤ dt (so the bin step never
     exceeds the CFL step), clipped to [0, max_bin]. Works on numpy and jax
-    arrays; +inf entries (padded slots) land in bin 0.
+    arrays (``dt_max``/``max_bin`` may be traced scalars); +inf entries
+    (padded slots) land in bin 0. Implemented as a comparison ladder
+    against f32 thresholds so numpy and XLA agree bit-for-bit; bins beyond
+    ``BIN_LADDER_MAX`` are unreachable (max_depth is validated against it).
     """
     xp = jnp if isinstance(dt, jax.Array) else np
     ratio = dt_max / xp.maximum(dt, 1e-30)
-    # tiny slack so dt == dt_max/2**k lands exactly in bin k despite log2
-    # rounding noise
-    b = xp.ceil(xp.log2(xp.maximum(ratio, 1e-30)) - 1e-6)
-    return xp.clip(b, 0, max_bin).astype(xp.int32)
+    thr = _BIN_THRESHOLDS if xp is np else jnp.asarray(_BIN_THRESHOLDS)
+    b = (ratio[..., None] > thr).sum(axis=-1).astype(xp.int32)
+    return xp.minimum(b, max_bin).astype(xp.int32)
 
 
 def bin_timestep(dt_max: float, bins):
@@ -103,6 +117,68 @@ def active_level(n: int, depth: int) -> int:
         return 0
     tz = (n & -n).bit_length() - 1
     return max(depth - tz, 0)
+
+
+def trailing_zeros_table(nsub: int) -> np.ndarray:
+    """tz(n) for n = 0..nsub as an int32 table (tz(0) := 0).
+
+    The device-scheduled cycle program derives the active level of a traced
+    sub-step index n as max(depth − tz_table[n], 0) — the same integer math
+    as :func:`active_level`, with the bit-twiddling hoisted into a static
+    lookup table.
+    """
+    return np.asarray(
+        [0] + [(n & -n).bit_length() - 1 for n in range(1, nsub + 1)],
+        np.int32)
+
+
+# ---------------------------------------------------- reproducible reductions
+def tree_sum(x):
+    """Sum by fixed binary fold (pad to a power of two, halve repeatedly).
+
+    ``xp.sum`` accumulation order is backend-defined — numpy uses pairwise
+    blocks, XLA whatever the reduce lowering picks — so the same f32 data
+    can sum to different last ulps on host and device. Every quantity that
+    must agree bitwise between a host-computed and a device-computed cycle
+    plan (u_floor) goes through this fold instead, on both sides.
+    """
+    xp = jnp if isinstance(x, jax.Array) else np
+    x = xp.ravel(x)
+    n = x.shape[0]
+    p = 1
+    while p < max(n, 1):
+        p *= 2
+    if p != n:
+        x = xp.concatenate([x, xp.zeros((p - n,), x.dtype)])
+    while x.shape[0] > 1:
+        h = x.shape[0] // 2
+        x = x[:h] + x[h:]
+    return x[0]
+
+
+def mass_weighted_mean_u(mass_masked, u):
+    """u_floor of :func:`particle_timesteps`: Σ m·u / Σ m via tree_sum.
+
+    Shared by the host planners and the device plan program so the floor —
+    and therefore every deepening decision downstream of it — is bitwise
+    identical regardless of where the plan was computed.
+    """
+    xp = jnp if isinstance(u, jax.Array) else np
+    num = tree_sum(mass_masked * u)
+    den = xp.maximum(tree_sum(mass_masked), 1e-30)
+    return num / den
+
+
+def speed_norm(vel):
+    """|v| with a pinned evaluation order: sqrt((v0² + v1²) + v2²) in f32.
+
+    np.linalg.norm's reduction strategy is not contractually ordered;
+    spelling the three-term sum out keeps host- and device-computed signal
+    speeds bit-identical.
+    """
+    xp = jnp if isinstance(vel, jax.Array) else np
+    v0, v1, v2 = vel[..., 0], vel[..., 1], vel[..., 2]
+    return xp.sqrt((v0 * v0 + v1 * v1) + v2 * v2)
 
 
 def cell_max_bins(bins: np.ndarray, mask: np.ndarray) -> np.ndarray:
@@ -444,6 +520,10 @@ class TimeBinSimulation:
         self.cfg = cfg
         self.n = len(pos)
         self.dt_max = dt_max
+        if int(max_depth) > BIN_LADDER_MAX:
+            raise ValueError(
+                f"max_depth {max_depth} exceeds the assign_bins comparison "
+                f"ladder ({BIN_LADDER_MAX} levels)")
         self.max_depth = int(max_depth)
         self.bin_delta = int(bin_delta)
         self.depth_headroom = int(depth_headroom)
@@ -569,8 +649,7 @@ class TimeBinSimulation:
         max equals the local value and long steps survive.
         """
         from .physics import sound_speed
-        u = np.asarray(cells.u)
-        v = np.linalg.norm(np.asarray(cells.vel), axis=-1)
+        v = np.asarray(speed_norm(np.asarray(cells.vel)))
         cs = np.asarray(sound_speed(jnp.ones_like(cells.u), cells.u,
                                     self.cfg.gamma))
         speed = np.where(np.asarray(cells.mask) > 0, cs + v, 0.0)
@@ -594,8 +673,12 @@ class TimeBinSimulation:
         dt_max_c = self.dt_max if self.dt_max is not None else float(
             live.max())
         # never let the ladder exceed max_depth: shorten the cycle instead
-        # of clamping fast particles onto too-long steps
-        dt_max_c = min(dt_max_c, dt_min_req * 2.0 ** self.max_depth)
+        # of clamping fast particles onto too-long steps. The min is taken
+        # in f32 so a device-computed plan (which has no f64 scalars) lands
+        # on the same dt_max_c bit pattern.
+        dt_max_c = float(min(np.float32(dt_max_c),
+                             np.float32(dt_min_req)
+                             * np.float32(2.0 ** self.max_depth)))
         bins = assign_bins(dts, dt_max_c, self.max_depth)
         bins = np.where(mask, bins, 0).astype(np.int32)
         bins = limit_neighbour_bins(bins, mask, self._ci, self._cj,
@@ -633,8 +716,8 @@ class TimeBinSimulation:
         bins_host = np.asarray(self.state.bins)
         mask_host = np.asarray(self.state.cells.mask)
         m_h = np.asarray(self.state.cells.mass * self.state.cells.mask)
-        u_floor = float((m_h * np.asarray(self.state.cells.u)).sum()
-                        / max(m_h.sum(), 1e-30))
+        u_floor = float(mass_weighted_mean_u(
+            m_h, np.asarray(self.state.cells.u)))
         hist = np.bincount(bins_host[mask_host > 0],
                            minlength=depth + 1)
 

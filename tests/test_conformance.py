@@ -33,6 +33,7 @@ subprocess parity still run everywhere).
 import numpy as np
 import pytest
 import jax
+import jax.numpy as jnp
 
 from repro.sph import SimulationSpec, SPHConfig, build_simulation
 
@@ -98,12 +99,24 @@ def _assert_bitwise(got: list, want: list, label: str):
 _REFS: dict = {}
 
 
-def _reference(scenario: str) -> list:
-    """Single-host timebin reference trajectory (cached per scenario)."""
-    if scenario not in _REFS:
-        _REFS[scenario] = _trajectory(
-            build_simulation(_timebin_spec(scenario)))
-    return _REFS[scenario]
+def _reference_run(scenario: str, ncycles: int = NCYCLES) -> tuple:
+    """Single-host timebin reference (snapshots, per-cycle stats), cached.
+
+    Longer trajectories are cached separately and reuse nothing — cheap,
+    and it keeps every cached snapshot list immutable."""
+    key = (scenario, ncycles)
+    if key not in _REFS:
+        sim = build_simulation(_timebin_spec(scenario))
+        snaps, stats = [], []
+        for _ in range(ncycles):
+            stats.append(sim.step())
+            snaps.append(_snapshot(sim.engine))
+        _REFS[key] = (snaps, stats)
+    return _REFS[key]
+
+
+def _reference(scenario: str, ncycles: int = NCYCLES) -> list:
+    return _reference_run(scenario, ncycles)[0]
 
 
 # ------------------------------------------------- timebin family (bitwise)
@@ -262,6 +275,201 @@ def test_fused_resident_transfer_discipline_four_ranks():
     assert eng._transport.programs.builds == builds
     assert eng.probe.total_compiles() == compiles
     assert eng.transfers.stats()["intra_state_bytes"] == 0
+
+
+def _hot_sedov_spec(ranks: int) -> SimulationSpec:
+    """A Sedov configuration whose blast provably deepens bins mid-cycle
+    (e0=30 with a loose CFL: the central particles' demand tightens
+    inside cycle 1), so a bins-mirror refresh MUST fire. max_depth=3
+    keeps the ladder — and any fully-unrolled device program — short."""
+    return SimulationSpec(
+        scenario="sedov", scenario_params={"n_side": 6, "e0": 30.0,
+                                           "seed": 0},
+        physics=SPHConfig(alpha_visc=1.0, cfl=0.3),
+        dt_max=0.01, max_depth=3, integrator="timebin",
+        backend="distributed", ranks=ranks,
+        transport="collective", residency="device")
+
+
+@requires4
+@pytest.mark.slow
+def test_bins_refreshes_pinned_to_per_event_minimum():
+    """`bins_refreshes` counts deepening *events*, not ranks or substeps:
+    the 4-rank hot Sedov trips exactly one mid-cycle deepening, so the
+    counter must read 1 (a per-rank or per-substep accounting bug would
+    read 4+), and the mirror pull must move one row per tripped rank —
+    never a full-state readback."""
+    sim = build_simulation(_hot_sedov_spec(ranks=4))
+    sim.step()
+    eng = sim.engine
+    assert eng.bins_refreshes == 1
+    # one (nrows,) int32 row per rank that owns deepened particles — the
+    # central blast straddles all four ranks here, so four row pulls
+    assert eng.transfers.intra_events.get("bins", 0) == 4
+    assert eng.transfers.stats()["intra_state_bytes"] == 0
+    # the event count is rank-independent: the single-rank run of the
+    # same dynamics sees the same one event (and pulls just its own row)
+    lone = build_simulation(_hot_sedov_spec(ranks=1))
+    lone.step()
+    assert lone.engine.bins_refreshes == 1
+    assert lone.engine.transfers.intra_events.get("bins", 0) == 1
+
+
+# ------------------------------------------------ device-scheduled segments
+NCYC_SEG = 4
+
+
+def _device_sched_spec(scenario: str, K: int, **over) -> SimulationSpec:
+    return _timebin_spec(scenario, backend="distributed", ranks=4,
+                         transport="collective", residency="device",
+                         schedule="device", segment_cycles=K, **over)
+
+
+@requires4
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+@pytest.mark.parametrize("K", [1, 4])
+def test_device_schedule_conformance(scenario, K):
+    """Device-scheduled K-cycle segments are bitwise the host-scheduled
+    ladder: state at every segment boundary, per-cycle stats everywhere.
+    For K>1 the engine state is *defined* only at segment boundaries, so
+    mid-segment cycles compare stats alone."""
+    refs, ref_stats = _reference_run(scenario, NCYC_SEG)
+    sim = build_simulation(_device_sched_spec(scenario, K))
+    eng = sim.engine
+    for c in range(NCYC_SEG):
+        s = sim.step()
+        assert s["schedule"] == "device" and s["segment_cycles"] == K
+        r = ref_stats[c]
+        for k in ("updates", "substeps", "depth", "force_substeps"):
+            assert s.get(k) == r.get(k), (c, k, s.get(k), r.get(k))
+        np.testing.assert_array_equal(s["bin_hist"], r["bin_hist"],
+                                      err_msg=f"K={K} cycle {c}: bin_hist")
+        assert s["t"] == float(refs[c]["time"])
+        if (c + 1) % K == 0:
+            snap = _snapshot(eng)
+            for name in refs[c]:
+                np.testing.assert_array_equal(
+                    snap[name], refs[c][name],
+                    err_msg=f"{scenario} K={K} cycle {c}: {name}")
+    if scenario == "kelvin_helmholtz" and K == 4:
+        # the shear flow crosses a cell boundary inside the segment —
+        # the device plan cannot rebin, so the crossing sentinel MUST
+        # abort and the host replay the cycles: still bitwise and still
+        # per-cycle stats parity (both asserted above)
+        assert eng.segment_aborts >= 1
+    else:
+        assert eng.segments == NCYC_SEG // K
+        assert eng.segment_aborts == 0
+
+
+@requires4
+@pytest.mark.slow
+def test_device_schedule_zero_intra_bytes_and_compile_discipline():
+    """The tentpole contract: a segment moves NOTHING between host and
+    device except the boundary table upload and the boundary stats pull —
+    no per-cycle flags, no bins mirrors, no schedule tables — and each
+    (signature, bucket, K) compiles its two programs exactly once, with
+    full reuse on the next segment."""
+    sim = build_simulation(_device_sched_spec("sedov", 4))
+    for _ in range(NCYC_SEG):
+        sim.step()
+    eng = sim.engine
+    stats = eng.transfers.stats()
+    assert stats["intra_state_bytes"] == 0
+    assert dict(eng.transfers.intra_bytes) == {}
+    assert stats["boundary_events"]["segment_tables"] > 0
+    assert stats["boundary_events"]["segment_stats"] == eng.segments == 1
+    for name, c in eng.probe.counts().items():
+        if name.startswith("program:"):
+            assert c == 1, (name, c)
+    assert any(k[0] == "cycle_scan" for k in eng.program_keys)
+    assert any(k[0] == "segment_plan" for k in eng.program_keys)
+    builds = eng._transport.programs.builds
+    compiles = eng.probe.total_compiles()
+    for _ in range(NCYC_SEG):                   # second segment: full reuse
+        sim.step()
+    assert eng._transport.programs.builds == builds
+    assert eng.probe.total_compiles() == compiles
+    assert eng.transfers.stats()["intra_state_bytes"] == 0
+
+
+@requires4
+@pytest.mark.slow
+def test_device_schedule_mid_segment_deepening():
+    """Bins that deepen in the middle of a compiled segment are handled
+    entirely on device — no sentinel trip, no host fallback — and the
+    boundary state stays bitwise. The host-scheduled run of the same
+    configuration proves the deepening event is really there (it must
+    refresh its bins mirror once)."""
+    host = build_simulation(_hot_sedov_spec(ranks=4))
+    host.step()
+    assert host.engine.bins_refreshes == 1      # the event exists
+    hot = dict(scenario="sedov",
+               scenario_params={"n_side": 6, "e0": 30.0, "seed": 0},
+               physics=SPHConfig(alpha_visc=1.0, cfl=0.3),
+               dt_max=0.01, max_depth=3, integrator="timebin")
+    ref = build_simulation(SimulationSpec(**hot, backend="local"))
+    refs = _trajectory(ref, NCYC_SEG)
+    sim = build_simulation(SimulationSpec(
+        **hot, backend="distributed", ranks=4, transport="collective",
+        residency="device", schedule="device", segment_cycles=4))
+    for _ in range(NCYC_SEG):
+        sim.step()
+    eng = sim.engine
+    snap = _snapshot(eng)
+    for name in refs[-1]:
+        np.testing.assert_array_equal(snap[name], refs[-1][name],
+                                      err_msg=f"deepening: {name}")
+    assert eng.segment_aborts == 0              # absorbed inside the scan
+    assert dict(eng.transfers.intra_bytes) == {}
+
+
+@requires4
+@pytest.mark.slow
+def test_device_schedule_nan_sentinel_trip_and_resume():
+    """A NaN minted on device trips the in-program sentinel; the segment
+    aborts back to the host ladder and replays bitwise — NaNs propagate
+    identically to the reference, and the observer's health record shows
+    the trip."""
+    ref = build_simulation(_timebin_spec("sedov"))
+    ref.step()
+    _poison_vel(ref.engine)
+    refs = []
+    with np.errstate(invalid="ignore"):
+        for _ in range(2):
+            ref.step()
+            refs.append(_snapshot(ref.engine))
+    sim = build_simulation(_device_sched_spec(
+        "sedov", 1, observe={"device_metrics": True}))
+    sim.step()
+    rec0 = sim.observer.records[-1]
+    assert rec0["health"] is not None and rec0["health"]["tripped"] is False
+    _poison_vel(sim.engine)
+    got = []
+    with np.errstate(invalid="ignore"):
+        for _ in range(2):
+            sim.step()
+            got.append(_snapshot(sim.engine))
+    eng = sim.engine
+    assert eng.segment_aborts >= 1
+    rec = sim.observer.records[-1]
+    assert rec["health"]["tripped"] is True
+    assert rec["health"]["flags"].get("flag_nan", 0) > 0
+    for c, (a, b) in enumerate(zip(got, refs)):
+        for name in b:
+            np.testing.assert_array_equal(
+                a[name], b[name], err_msg=f"nan-resume cycle {c}: {name}")
+
+
+def _poison_vel(eng) -> None:
+    """NaN one real particle's velocity component, in place."""
+    cells = eng.state.cells
+    vel = np.asarray(cells.vel).copy()
+    c, p = np.argwhere(np.asarray(cells.mask) > 0)[0]
+    vel[c, p, 0] = np.nan
+    eng.state = eng.state._replace(
+        cells=cells._replace(vel=jnp.asarray(vel)))
 
 
 # --------------------------------------------------- device-metrics carry

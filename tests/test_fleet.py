@@ -116,6 +116,42 @@ class TestQueue:
         with pytest.raises(ValueError):
             runner.submit(_spec("sedov"), request_id="r1")
 
+    def test_expiry_fires_on_poll_without_claim(self):
+        """The sweep-only-on-claim bug: a request whose deadline passes
+        must reach EXPIRED (callback fired) from a pure status check —
+        no take_ready/drain claim anywhere in the sequence."""
+        runner = FleetRunner(fleet_devices=1, observe=True)
+        seen = []
+        req = runner.submit(_spec("sedov"), deadline=0.0,
+                            callback=seen.append)
+        import time
+        time.sleep(0.01)
+        stats = runner.poll()
+        assert req.state is RequestState.EXPIRED
+        assert isinstance(req.error, TimeoutError)
+        assert seen == [req]
+        assert stats["queue"]["expired"] == 1
+        assert runner.terminal_status == {"expired": 1}
+        # and the expiry left a visible span on the request's row
+        assert [s for s in runner.tracer.spans if s.name == "expired"]
+
+    def test_expiry_fires_on_next_submit(self):
+        """A later submission is also a front-door entry: it sweeps the
+        stale request out (freeing its admission slot) before admitting."""
+        runner = FleetRunner(max_inflight=1, fleet_devices=1)
+        seen = []
+        stale = runner.submit(_spec("sedov"), deadline=0.0,
+                              callback=seen.append)
+        import time
+        time.sleep(0.01)
+        # at max_inflight=1 this would raise AdmissionError if the
+        # overdue request still held its slot
+        fresh = runner.submit(_spec("sedov"))
+        assert stale.state is RequestState.EXPIRED
+        assert seen == [stale]
+        assert fresh.state is RequestState.QUEUED
+        assert runner.terminal_status == {"expired": 1}
+
 
 # ---------------------------------------------------------------- batcher
 class TestBatcher:

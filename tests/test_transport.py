@@ -68,6 +68,49 @@ def test_bucket_policy_one_change_per_crossing():
     assert len(pol2.events) == events0    # no thrash at the boundary
 
 
+def test_bucket_policy_no_immediate_reshrink_after_shrink():
+    """Shrink hysteresis must be re-earned after every shrink: a stream
+    sitting just under the *new* half-bucket boundary cannot halve again
+    on the very next fit (that would churn one recompile per fit on a
+    sustained drop instead of one per patience window)."""
+    pol = BucketPolicy(min_bucket=1, shrink_patience=3)
+    pol.fit("k", 100)                     # bucket 128
+    for _ in range(3):
+        pol.fit("k", 20)                  # need 32 ≤ 64: earns the shrink
+    assert pol.current("k") == 64
+    # still just under the new boundary (32 ≤ 32): patience starts over
+    assert pol.fit("k", 20) == 64
+    assert pol.fit("k", 20) == 64
+    assert pol.fit("k", 20) == 32         # 3rd low fit: one more level
+    assert [new for (_k, _old, new) in pol.events] == [64, 32]
+
+
+def test_bucket_policy_floor_oscillation_counter_bounded():
+    """Fits pinned at the min_bucket floor must not prime the shrink
+    counter: after a long stay at the floor, demand oscillating around a
+    power-of-two boundary still pays full patience per shrink — at most
+    one bucket event per crossing, never one per dip."""
+    pol = BucketPolicy(min_bucket=8, shrink_patience=2)
+    pol.fit("k", 64)
+    for _ in range(6):
+        pol.fit("k", 1)                   # walks 64→32→16→8, then sits
+    assert pol.current("k") == 8
+    n_events = len(pol.events)
+    for _ in range(50):
+        pol.fit("k", 1)                   # at the floor: no events
+    assert len(pol.events) == n_events
+    assert pol._below["k"] <= pol.shrink_patience
+    pol.fit("k", 100)                     # grow back to 128
+    pol.fit("k", 63)                      # one dip under 64 …
+    assert pol.current("k") == 128        # … must NOT shrink immediately
+    pol.fit("k", 65)                      # back above: counter cleared
+    for _ in range(30):
+        pol.fit("k", 63)                  # dip primes the counter …
+        pol.fit("k", 65)                  # … and the high fit resets it
+    assert pol.current("k") == 128        # boundary oscillation: no churn
+    assert len(pol.events) == n_events + 1   # just the grow event
+
+
 def test_bucket_policy_sustained_drop_walks_down():
     pol = BucketPolicy(min_bucket=2, shrink_patience=2)
     pol.fit("k", 100)                     # 128
