@@ -1,15 +1,23 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Standalone-runnable: ``python -m benchmarks.common`` (or ``python
+benchmarks/common.py``) validates the repo-root ``BENCH_*.json``
+artifacts and prints the trajectory + environment provenance as JSON —
+the same blocks ``benchmarks/run.py`` embeds in ``summary.json``.
+"""
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 from typing import Callable, Dict, List
 
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
@@ -36,6 +44,81 @@ def emit(rows: List[Dict], name: str) -> None:
         us = r.get("us_per_call", "")
         derived = r.get("derived", "")
         print(f"{r['name']},{us},{derived}", flush=True)
+
+
+def env_provenance() -> dict:
+    """What ran these numbers: versions, backend, devices, XLA flags."""
+    env = {"python": sys.version.split()[0],
+           "platform": sys.platform,
+           "xla_flags": os.environ.get("XLA_FLAGS", ""),
+           "jax_platforms": os.environ.get("JAX_PLATFORMS", "")}
+    try:
+        import jax
+        import jaxlib
+        env["jax"] = jax.__version__
+        env["jaxlib"] = jaxlib.__version__
+        env["backend"] = jax.default_backend()
+        env["device_count"] = jax.device_count()
+    except Exception as e:  # pragma: no cover - jax is a baked-in dep
+        env["jax"] = f"unavailable: {type(e).__name__}"
+    try:
+        sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+        from repro.observability import METRICS_SCHEMA_VERSION
+        env["metrics_schema_version"] = METRICS_SCHEMA_VERSION
+    except Exception:  # pragma: no cover
+        pass
+    return env
+
+
+def bench_trajectory(root: str = REPO_ROOT) -> List[Dict]:
+    """Validate the repo-root ``BENCH_*.json`` artifacts and list them.
+
+    Each benchmark module leaves its headline artifact at the repo root;
+    this collects them into one trajectory list (embedded in
+    ``summary.json`` as the cross-run provenance record), checking every
+    file parses, is a dict with a ``benchmark`` name, and does not claim
+    a metrics schema newer than this tree understands. A malformed
+    artifact is reported in the list (``valid: false``) rather than
+    silently skipped."""
+    try:
+        sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+        from repro.observability import METRICS_SCHEMA_VERSION
+    except Exception:  # pragma: no cover
+        METRICS_SCHEMA_VERSION = None
+    out = []
+    for fname in sorted(os.listdir(root)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        path = os.path.join(root, fname)
+        entry = {"file": fname, "valid": True, "problems": []}
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            entry["valid"] = False
+            entry["problems"].append(f"unreadable: {e}")
+            out.append(entry)
+            continue
+        if not isinstance(doc, dict):
+            entry["valid"] = False
+            entry["problems"].append("not a JSON object")
+            out.append(entry)
+            continue
+        entry["benchmark"] = doc.get("benchmark")
+        if not entry["benchmark"]:
+            entry["valid"] = False
+            entry["problems"].append("missing 'benchmark' name")
+        ver = doc.get("metrics_schema_version")
+        entry["metrics_schema_version"] = ver
+        if ver is not None and METRICS_SCHEMA_VERSION is not None \
+                and ver > METRICS_SCHEMA_VERSION:
+            entry["valid"] = False
+            entry["problems"].append(
+                f"claims metrics schema {ver} > understood "
+                f"{METRICS_SCHEMA_VERSION}")
+        entry["mtime_unix"] = round(os.path.getmtime(path), 1)
+        out.append(entry)
+    return out
 
 
 def build_clustered_taskgraph(n_particles=4096, seed=0, *, base_side=6,
@@ -93,3 +176,10 @@ def build_clustered_taskgraph(n_particles=4096, seed=0, *, base_side=6,
             g.add_dependency(f, ghost[c])
             g.add_dependency(kick[c], f)
     return g, len(leaves), occ
+
+
+if __name__ == "__main__":
+    print(json.dumps({"_env": env_provenance(),
+                      "_bench_trajectory": bench_trajectory()}, indent=1))
+    raise SystemExit(
+        1 if any(not e["valid"] for e in bench_trajectory()) else 0)

@@ -9,6 +9,10 @@ behind the task-timeline plot — plus the cost of the tracer itself
 Results land in ``benchmarks/results/observability_bench.json`` and, as
 the repo-level benchmark artifact, in ``BENCH_observability.json`` at the
 repo root (per-phase medians, run provenance, metrics schema version).
+Since schema v3 the artifact also carries the attribution column: the
+per-cell work vectors' share of the single per-cycle metrics pull, the
+cost-calibration fit residual, and the repartition advisor's
+advised-vs-current imbalance (which must never regress).
 
 The measurement runs in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the mesh exists
@@ -26,9 +30,9 @@ import sys
 import time
 
 try:                                    # runnable as module or script
-    from .common import emit
+    from .common import emit, env_provenance
 except ImportError:                     # pragma: no cover
-    from common import emit
+    from common import emit, env_provenance
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -76,6 +80,11 @@ out = {
     "device_phase_units": rec.get("device_phase_units"),
     "metrics_pulls": tstats["boundary_events"].get("metrics", 0),
     "metrics_pull_bytes": tstats["boundary_bytes"].get("metrics", 0),
+    "cell_work": rec.get("cell_work"),
+    "cost_calibration": rec.get("cost_calibration"),
+    "advisor": rec.get("advisor"),
+    "metrics_row_bytes": int(sum(np.asarray(a).nbytes
+                                 for a in sim.engine.device_metrics_last)),
     "cycles_total": %(warm)d + %(ncycles)d,
     "backend": jax.default_backend(),
     "device_count": jax.device_count(),
@@ -146,6 +155,28 @@ def run(n_side=6, ncycles=3, nranks=4, warm=2) -> list:
         raise RuntimeError(
             f"device-metrics pull cost exceeds one transfer per cycle: "
             f"{pulls} pulls over {cyc} cycles")
+    # attribution column (schema v3): the per-cell vectors' share of the
+    # single metrics pull, the calibration fit residual, and the
+    # repartition advisor's advised-vs-current imbalance
+    adv = res.get("advisor") or {}
+    cal = res.get("cost_calibration") or {}
+    row_bytes = res.get("metrics_row_bytes") or 0
+    cell_pull_bytes = (res.get("metrics_pull_bytes", 0) / pulls - row_bytes
+                       if pulls else 0.0)
+    resid = cal.get("residual")
+    rows.append({
+        "name": "observability/attribution/cell_pull_bytes_per_cycle",
+        "us_per_call": round(cell_pull_bytes, 1),
+        "derived": f"calibration_residual="
+                   f"{'-' if resid is None else round(resid, 4)};"
+                   f"advised={adv.get('advised_imbalance')};"
+                   f"current={adv.get('current_imbalance')}"})
+    if adv and adv.get("advised_imbalance", 0.0) \
+            > adv.get("current_imbalance", 0.0) + 1e-9:
+        raise RuntimeError(
+            f"advisor regressed the partition: advised "
+            f"{adv['advised_imbalance']} > current "
+            f"{adv['current_imbalance']}")
     emit(rows, "observability_bench")
 
     from repro.observability import METRICS_SCHEMA_VERSION
@@ -175,6 +206,13 @@ def run(n_side=6, ncycles=3, nranks=4, warm=2) -> list:
             "device_imbalance": res.get("device_imbalance"),
             "device_phase_units": res.get("device_phase_units"),
         },
+        "attribution": {
+            "cell_pull_bytes_per_cycle": cell_pull_bytes,
+            "cell_work": res.get("cell_work"),
+            "cost_calibration": res.get("cost_calibration"),
+            "advisor": res.get("advisor"),
+        },
+        "_env": env_provenance(),
     }
     with open(os.path.join(ROOT, "BENCH_observability.json"), "w") as f:
         json.dump(bench, f, indent=1, default=str)

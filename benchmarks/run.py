@@ -43,81 +43,6 @@ def _classify(exc: BaseException) -> str:
     return "error"
 
 
-def _env_provenance() -> dict:
-    """What ran these numbers: versions, backend, devices, XLA flags."""
-    env = {"python": sys.version.split()[0],
-           "platform": sys.platform,
-           "xla_flags": os.environ.get("XLA_FLAGS", ""),
-           "jax_platforms": os.environ.get("JAX_PLATFORMS", "")}
-    try:
-        import jax
-        import jaxlib
-        env["jax"] = jax.__version__
-        env["jaxlib"] = jaxlib.__version__
-        env["backend"] = jax.default_backend()
-        env["device_count"] = jax.device_count()
-    except Exception as e:  # pragma: no cover - jax is a baked-in dep
-        env["jax"] = f"unavailable: {type(e).__name__}"
-    try:
-        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
-                                        "src"))
-        from repro.observability import METRICS_SCHEMA_VERSION
-        env["metrics_schema_version"] = METRICS_SCHEMA_VERSION
-    except Exception:  # pragma: no cover
-        pass
-    return env
-
-
-def _bench_trajectory() -> list:
-    """Validate the repo-root ``BENCH_*.json`` artifacts and list them.
-
-    Each benchmark module leaves its headline artifact at the repo root;
-    this collects them into one trajectory list in ``summary.json`` (the
-    cross-run provenance record), checking every file parses, is a dict
-    with a ``benchmark`` name, and does not claim a metrics schema newer
-    than this tree understands. A malformed artifact is reported in the
-    list (``valid: false``) rather than silently skipped."""
-    root = os.path.join(os.path.dirname(__file__), "..")
-    try:
-        from repro.observability import METRICS_SCHEMA_VERSION
-    except Exception:  # pragma: no cover
-        METRICS_SCHEMA_VERSION = None
-    out = []
-    for fname in sorted(os.listdir(root)):
-        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
-            continue
-        path = os.path.join(root, fname)
-        entry = {"file": fname, "valid": True, "problems": []}
-        try:
-            with open(path) as f:
-                doc = json.load(f)
-        except (OSError, ValueError) as e:
-            entry["valid"] = False
-            entry["problems"].append(f"unreadable: {e}")
-            out.append(entry)
-            continue
-        if not isinstance(doc, dict):
-            entry["valid"] = False
-            entry["problems"].append("not a JSON object")
-            out.append(entry)
-            continue
-        entry["benchmark"] = doc.get("benchmark")
-        if not entry["benchmark"]:
-            entry["valid"] = False
-            entry["problems"].append("missing 'benchmark' name")
-        ver = doc.get("metrics_schema_version")
-        entry["metrics_schema_version"] = ver
-        if ver is not None and METRICS_SCHEMA_VERSION is not None \
-                and ver > METRICS_SCHEMA_VERSION:
-            entry["valid"] = False
-            entry["problems"].append(
-                f"claims metrics schema {ver} > understood "
-                f"{METRICS_SCHEMA_VERSION}")
-        entry["mtime_unix"] = round(os.path.getmtime(path), 1)
-        out.append(entry)
-    return out
-
-
 def main() -> None:
     print("name,us_per_call,derived")
     # module names, imported lazily inside the try below: a missing
@@ -162,8 +87,11 @@ def main() -> None:
                               "seconds": round(time.time() - t0, 1)}
             print(f"# {label} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
-    summary["_env"] = _env_provenance()
-    summary["_bench_trajectory"] = _bench_trajectory()
+    # factored into benchmarks/common.py so they are standalone-runnable
+    # (``python -m benchmarks.common``) and testable without a full run
+    from .common import bench_trajectory, env_provenance
+    summary["_env"] = env_provenance()
+    summary["_bench_trajectory"] = bench_trajectory()
     bad = [e["file"] for e in summary["_bench_trajectory"]
            if not e["valid"]]
     if bad:

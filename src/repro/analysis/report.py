@@ -206,12 +206,81 @@ def render_timeline(doc: Dict, width: int = 72) -> str:
     return "\n".join(lines)
 
 
+def attribution_table(records: List[Dict]) -> str:
+    """Per-rank × per-kind cost-attribution table from the last record's
+    ``cell_work`` block (schema v3). Pre-v3 logs — upgraded records with
+    ``cell_work: None`` — render every column as '-'."""
+    if not records:
+        return "(no metrics records)"
+    from ..observability import upgrade_record
+    last = upgrade_record(records[-1])
+    cw = last.get("cell_work")
+    cols = (cw or {}).get("columns") or ["drift", "density", "force",
+                                         "exchange"]
+    lines = ["per-rank cost attribution (work units by task kind, "
+             "last cycle):",
+             f"{'rank':>5} " + " ".join(f"{c:>12}" for c in cols)]
+    if not cw:
+        lines.append(f"{'-':>5} " + " ".join(f"{'-':>12}" for _ in cols))
+        lines.append("(record predates schema v3 — no per-cell "
+                     "attribution)")
+        return "\n".join(lines)
+    for r, row in enumerate(cw["per_rank"]):
+        lines.append(f"{r:>5} " + " ".join(f"{v:>12.4g}" for v in row))
+    lines.append(f"{'total':>5} "
+                 + " ".join(f"{v:>12.4g}" for v in cw["totals"]))
+    cal = last.get("cost_calibration")
+    if cal and cal.get("kinds"):
+        res = cal.get("residual")
+        lines += ["", "calibrated per-kind rates (joint fit over "
+                      f"{cal.get('nsamples', 0)} cycle samples, relative "
+                      "residual "
+                      f"{'-' if res is None else format(res, '.3f')}):",
+                  f"{'kind':<12} {'rate (s/unit)':>14} {'confidence':>11}"]
+        for k in sorted(cal["kinds"]):
+            v = cal["kinds"][k]
+            lines.append(f"{k:<12} {v['rate']:>14.4g} "
+                         f"{v['confidence']:>11.3f}")
+    return "\n".join(lines)
+
+
+def advisor_trend(records: List[Dict]) -> str:
+    """Repartition-advisor time-series: measured current vs advised
+    imbalance per cycle (schema v3; '-' for records predating it)."""
+    if not records:
+        return "(no metrics records)"
+    from ..observability import upgrade_record
+    records = [upgrade_record(r) for r in records]
+    lines = ["repartition advisor trend (measured per-rank load "
+             "imbalance, max/mean):",
+             f"{'cycle':>5} {'current':>9} {'advised':>9} "
+             f"{'candidate':>10} {'accepted':>9}"]
+    any_adv = False
+    for r in records:
+        adv = r.get("advisor")
+        if adv is None:
+            lines.append(f"{r.get('cycle', 0):>5} {'-':>9} {'-':>9} "
+                         f"{'-':>10} {'-':>9}")
+            continue
+        any_adv = True
+        lines.append(
+            f"{r.get('cycle', 0):>5} "
+            f"{adv['current_imbalance']:>9.3f} "
+            f"{adv['advised_imbalance']:>9.3f} "
+            f"{adv['candidate_imbalance']:>10.3f} "
+            f"{'yes' if adv.get('accepted') else 'keep':>9}")
+    if not any_adv:
+        lines.append("(no advisor records — single rank, device metrics "
+                     "off, or pre-v3 log)")
+    return "\n".join(lines)
+
+
 def metrics_summary(records: List[Dict]) -> str:
     """Per-cycle imbalance/dead-time table + measured-vs-modelled costs.
 
-    Accepts schema-v1 (PR 5) and v2 records alike: every record is
-    normalised through ``upgrade_record``, so the device-metrics columns
-    render as '-' for logs that predate them."""
+    Accepts schema-v1 (PR 5) through v3 records alike: every record is
+    normalised through ``upgrade_record``, so the device-metrics and
+    cost-attribution columns render as '-' for logs that predate them."""
     if not records:
         return "(no metrics records)"
     from ..observability import upgrade_record
@@ -258,6 +327,7 @@ def metrics_summary(records: List[Dict]) -> str:
         for k in sorted(ratios):
             lines.append(f"{k:<16} {units.get(k, 0):>12.4g} "
                          f"{ratios[k]:>12.4g}")
+    lines += ["", attribution_table(records), "", advisor_trend(records)]
     return "\n".join(lines)
 
 

@@ -193,6 +193,52 @@ class CostModel:
             out[kind] = (acc[0] / acc[1]) / base if base > 0 else float("inf")
         return out
 
+    def calibrate(self, samples) -> Dict[str, Dict[str, float]]:
+        """Fit one seconds-per-unit coefficient per task kind from joint
+        (units-by-kind, seconds) samples — the online refinement of the
+        paper's measured-cost feedback when the run is fully fused and
+        only aggregate walls exist.
+
+        ``samples`` is a sequence of ``(units: Dict[str, float],
+        seconds: float)`` pairs, one per cycle. A non-negative
+        least-squares fit (lstsq with clamping) recovers each kind's
+        rate; the fit's R² is reported as a shared confidence and each
+        positively-fitted rate is EMA-folded into :attr:`rates`. Kinds
+        whose unit columns are collinear across samples (e.g. density
+        and force when every live pair runs both) split the joint rate
+        between them — the *sum* of their costs is still right, which is
+        what the decomposition weights need. Returns ``{kind: {"rate",
+        "confidence"}}`` (empty if under-determined)."""
+        import numpy as _np
+        samples = [(dict(u), float(s)) for u, s in samples
+                   if s > 0 and any(v > 0 for v in u.values())]
+        kinds = sorted({k for u, _ in samples for k in u if u[k] > 0})
+        if not kinds or len(samples) < 1:
+            return {}
+        A = _np.array([[float(u.get(k, 0.0)) for k in kinds]
+                       for u, _ in samples], dtype=_np.float64)
+        b = _np.array([s for _, s in samples], dtype=_np.float64)
+        coef, *_ = _np.linalg.lstsq(A, b, rcond=None)
+        coef = _np.clip(coef, 0.0, None)
+        pred = A @ coef
+        ss_res = float(((b - pred) ** 2).sum())
+        ss_tot = float(((b - b.mean()) ** 2).sum())
+        r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else (
+            1.0 if ss_res < 1e-18 else 0.0)
+        confidence = float(max(0.0, min(1.0, r2)))
+        out: Dict[str, Dict[str, float]] = {}
+        for k, c in zip(kinds, coef):
+            c = float(c)
+            out[k] = {"rate": c, "confidence": confidence}
+            if c > 0:
+                if k not in self.modelled_baseline:
+                    self.modelled_baseline[k] = self.rates.get(
+                        k, self.default_rate)
+                old = self.rates.get(k)
+                self.rates[k] = c if old is None else (
+                    (1 - self.ema) * old + self.ema * c)
+        return out
+
 
 # --------------------------------------------------------------- LM analytic
 @dataclass(frozen=True)

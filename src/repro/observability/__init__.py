@@ -34,7 +34,8 @@ This package must stay importable before jax is configured (its CLI sets
 ``XLA_FLAGS``), so nothing here imports jax at module scope.
 """
 
-from .device_metrics import (COUNT_COLUMNS, VALUE_COLUMNS,
+from .costs import RepartitionAdvisor, TaskCostLedger, weighted_imbalance
+from .device_metrics import (CELL_COLUMNS, COUNT_COLUMNS, VALUE_COLUMNS,
                              DEVICE_METRICS_VERSION)
 from .flight import FlightRecorder, read_bundle, validate_bundle
 from .metrics import METRICS_SCHEMA_VERSION, MetricsRegistry
@@ -46,7 +47,9 @@ from .tracer import NULL_TRACER, NullTracer, Span, Tracer
 
 __all__ = [
     "METRICS_SCHEMA_VERSION", "MetricsRegistry",
-    "COUNT_COLUMNS", "VALUE_COLUMNS", "DEVICE_METRICS_VERSION",
+    "CELL_COLUMNS", "COUNT_COLUMNS", "VALUE_COLUMNS",
+    "DEVICE_METRICS_VERSION",
+    "RepartitionAdvisor", "TaskCostLedger", "weighted_imbalance",
     "FlightRecorder", "read_bundle", "validate_bundle",
     "ObserveSpec", "RunObserver", "UMBRELLA_SPANS",
     "chrome_trace", "jsonify", "read_metrics_jsonl", "upgrade_record",

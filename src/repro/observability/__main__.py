@@ -23,6 +23,15 @@ NaN mid-run (tripping the NaN sentinel), and validates the post-mortem
 bundle that results. ``dump --validate PATH`` just validates an existing
 bundle.
 
+The ``advise`` subcommand is the offline what-if repartition analysis:
+
+    python -m repro.observability advise --metrics metrics.jsonl
+    python -m repro.observability advise --ranks 4 --cycles 2
+
+renders the per-rank cost-attribution table and the repartition advisor's
+current-vs-advised imbalance trend, either from an existing metrics log
+or from a fresh short clustered run (host transport — emulated ranks).
+
 Must run before jax is imported elsewhere: it sets ``XLA_FLAGS`` to emulate
 the requested rank count when the environment hasn't already.
 """
@@ -94,6 +103,13 @@ def main(argv=None) -> int:
     metrics_path = os.path.join(args.out_dir, "metrics.jsonl")
     doc = obs.export_chrome_trace(trace_path, process_name="sedov traced run")
     obs.write_metrics_jsonl(metrics_path)
+    # cost-attribution table + repartition-advisor trend, uploaded with
+    # the trace artifacts by the CI acceptance step
+    from repro.analysis.report import advisor_trend, attribution_table
+    trend_path = os.path.join(args.out_dir, "advisor_trend.txt")
+    with open(trend_path, "w") as f:
+        f.write(attribution_table(obs.records) + "\n\n"
+                + advisor_trend(obs.records) + "\n")
 
     failures = []
     errors = validate_chrome_trace(doc)
@@ -132,6 +148,35 @@ def main(argv=None) -> int:
         if not dmx:
             failures.append("no device_metrics in the cycle record")
         else:
+            # per-cell attribution sums exactly to the device phase-unit
+            # totals (owned rows only — halo replicas fold onto their
+            # owner cell, so nothing is double-counted)
+            cw = getattr(eng, "device_cell_work_last", None)
+            if cw is None:
+                failures.append("no device_cell_work_last on the engine")
+            else:
+                import numpy as np
+                cells = np.asarray(cw["cells"])
+                per_rank = np.asarray(cw["per_rank"])
+                cols = list(cw["columns"])
+                du = rec.get("device_phase_units") or {}
+                # exchange exactness is a device-path identity (the host
+                # ladder's value column splits shipped slots evenly per
+                # rank; its per-cell column is the receiver-side truth)
+                exact = ("density", "force") + (
+                    ("exchange",) if args.residency == "device" else ())
+                for kind in exact:
+                    tot = float(cells[:, cols.index(kind)].sum())
+                    want = float(du.get(kind, 0.0))
+                    if abs(tot - want) > 1e-6 * max(want, 1.0):
+                        failures.append(
+                            f"per-cell {kind} units {tot} != device "
+                            f"phase total {want}")
+                if not np.allclose(cells.sum(axis=0), per_rank.sum(axis=0)):
+                    failures.append(
+                        "per-cell column sums disagree with per-rank "
+                        f"attribution: {cells.sum(axis=0)} vs "
+                        f"{per_rank.sum(axis=0)}")
             if len(dmx["per_rank_work"]) != args.ranks:
                 failures.append(
                     f"device per_rank_work has "
@@ -160,7 +205,11 @@ def main(argv=None) -> int:
         "dead_frac": rec.get("dead_frac"),
         "bin_occupancy_imbalance": rec.get("bin_occupancy_imbalance"),
         "total_compiles": rec.get("total_compiles"),
+        "cell_work": rec.get("cell_work"),
+        "cost_calibration": rec.get("cost_calibration"),
+        "advisor": rec.get("advisor"),
         "trace": trace_path, "metrics": metrics_path,
+        "advisor_trend": trend_path,
         "ok": not failures,
     }
     print(json.dumps(jsonify(summary), indent=1))
@@ -246,8 +295,59 @@ def dump_main(argv=None) -> int:
     return 0
 
 
+def advise_main(argv=None) -> int:
+    """Offline what-if repartition analysis (schema v3).
+
+    With ``--metrics`` renders the cost-attribution table and advisor
+    trend from an existing per-cycle JSONL (any supported schema —
+    pre-v3 logs render '-' markers). Without it, runs a short clustered
+    scenario on an emulated rank partition (host transport — no real
+    devices needed) and advises on its *measured* cell weights.
+    """
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.observability advise",
+        description="offline what-if repartition analysis: attribution "
+                    "table + advisor trend from a metrics.jsonl, or from "
+                    "a fresh short clustered run")
+    ap.add_argument("--metrics", metavar="PATH",
+                    help="existing metrics.jsonl to analyse")
+    ap.add_argument("--scenario", default="clustered")
+    ap.add_argument("--n", type=int, default=96,
+                    help="particle count for the fresh-run mode")
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--cycles", type=int, default=2)
+    ap.add_argument("--out", metavar="PATH",
+                    help="also write the rendered report here")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.report import advisor_trend, attribution_table
+
+    if args.metrics:
+        from repro.observability import read_metrics_jsonl
+        records = read_metrics_jsonl(args.metrics)
+    else:
+        from repro.sph import SimulationSpec, build_simulation
+        spec = SimulationSpec(
+            scenario=args.scenario,
+            scenario_params={"n": args.n, "seed": 0},
+            integrator="timebin", backend="distributed", ranks=args.ranks,
+            transport="host", observe=True)
+        sim = build_simulation(spec)
+        for _ in range(args.cycles):
+            sim.step()
+        records = sim.observer.records
+    report = attribution_table(records) + "\n\n" + advisor_trend(records)
+    print(report)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(report + "\n")
+    return 0
+
+
 if __name__ == "__main__":
     _argv = sys.argv[1:]
     if _argv and _argv[0] == "dump":
         raise SystemExit(dump_main(_argv[1:]))
+    if _argv and _argv[0] == "advise":
+        raise SystemExit(advise_main(_argv[1:]))
     raise SystemExit(main(_argv))

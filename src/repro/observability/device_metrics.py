@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-DEVICE_METRICS_VERSION = 1
+DEVICE_METRICS_VERSION = 2
 
 COUNT_COLUMNS: Tuple[str, ...] = (
     "substeps",         # sub-step program executions folded into this row
@@ -69,6 +69,21 @@ VALUE_COLUMNS: Tuple[str, ...] = (
 )
 N_COUNTS = len(COUNT_COLUMNS)
 N_VALUES = len(VALUE_COLUMNS)
+
+# Per-cell work vectors (device-metrics version 2). One float32 row per
+# *extended* cell row (owned rows first, halo replicas after), integer
+# valued — work units stay far below 2**24 per cycle so float32 adds are
+# exact. Drift/density/force land on owned rows; exchange is counted
+# receiver-side on the halo rows it unpacks into (folded back onto the
+# owner cell on the host, so no slot is ever double-counted).
+CELL_COLUMNS: Tuple[str, ...] = (
+    "drift",      # alive particles drifted in this cell's rows
+    "density",    # live pair blocks attributed to this cell (density)
+    "force",      # live pair blocks attributed to this cell (force)
+    "exchange",   # halo slots unpacked for this cell (recv-side units)
+)
+N_CELL_COLS = len(CELL_COLUMNS)
+CELL_INDEX = {name: i for i, name in enumerate(CELL_COLUMNS)}
 
 # how each value column folds across sub-steps within one cycle
 _V_ACCUM: Tuple[str, ...] = ("sum", "sum", "sum", "sum",
@@ -146,6 +161,109 @@ def measure_substep(*, mask, active, vel, u, mass, rho,
         jnp.min(jnp.where(alive, rho, jnp.inf)).astype(f32),
     ])
     return counts, values
+
+
+def measure_cells(*, nrows: int, K: int, mask, pmask, ci, cj,
+                  exch_rows=None, exch_valid=None, nexch=1):
+    """Per-cell work vector of one sub-step, *inside* a compiled program.
+
+    Returns a float32 ``(nrows, N_CELL_COLS)`` buffer over this rank's
+    extended rows. Attribution rules (the identities the tests pin):
+
+    * drift — alive-particle count per owned row (rows ``[0, K)``); the
+      owned-row sum equals the ``drift_active`` count column.
+    * density/force — each live pair block is charged to its *owned*
+      endpoint (``ci`` when ``ci < K``, else ``cj``; the pair tables
+      guarantee at least one endpoint is owned). The owned-row sums
+      equal the ``density_units``/``force_units`` value columns.
+    * exchange — ``nexch`` units per valid slot, charged receiver-side
+      at the row the slot unpacks into. The all-row sum equals the
+      ``exchange_units`` value column; the host fold maps halo rows
+      back onto owner cells.
+
+    Like :func:`measure_substep`, every input already flows through the
+    fused body, so the scatters only add consumers — never producers —
+    to the physics dataflow (bitwise invisible, zero extra compiles).
+    Row ``nrows`` is a scratch row: invalid entries scatter there and
+    are sliced away.
+    """
+    import jax.numpy as jnp
+
+    f32 = jnp.float32
+    cw = jnp.zeros((nrows + 1, N_CELL_COLS), f32)
+
+    alive = jnp.sum((mask > 0).astype(f32), axis=-1)
+    cw = cw.at[:K, CELL_INDEX["drift"]].set(alive[:K])
+
+    pm = jnp.asarray(pmask, f32).reshape(-1)
+    ci = jnp.asarray(ci).reshape(-1)
+    cj = jnp.asarray(cj).reshape(-1)
+    owner = jnp.where(ci < K, ci, cj)
+    tgt = jnp.where(pm > 0, owner, nrows)
+    cw = cw.at[tgt, CELL_INDEX["density"]].add(pm)
+    cw = cw.at[tgt, CELL_INDEX["force"]].add(pm)
+
+    if exch_rows is not None:
+        ev = jnp.asarray(exch_valid, f32).reshape(-1)
+        rows = jnp.asarray(exch_rows).reshape(-1)
+        et = jnp.where(ev > 0, rows, nrows)
+        cw = cw.at[et, CELL_INDEX["exchange"]].add(
+            ev * jnp.asarray(nexch, f32))
+    return cw[:nrows]
+
+
+def zero_cell_work(ncells: int, nranks: int = 1):
+    """Host-side zero accumulator for per-cell attribution: a global
+    ``(ncells, N_CELL_COLS)`` float64 buffer plus a per-rank
+    ``(nranks, N_CELL_COLS)`` totals buffer."""
+    return (np.zeros((ncells, N_CELL_COLS), np.float64),
+            np.zeros((nranks, N_CELL_COLS), np.float64))
+
+
+def fold_cell_rows(cell_rows, owned: Sequence[np.ndarray],
+                   halo: Sequence[np.ndarray], ncells: int,
+                   K: int) -> Dict[str, object]:
+    """Fold pulled per-rank extended-row buffers onto global cells.
+
+    ``cell_rows`` is the stacked ``(nranks, nrows, N_CELL_COLS)`` device
+    output; ``owned[r]``/``halo[r]`` map rank ``r``'s rows to global cell
+    ids (owned rows from 0, halo rows from the shared owned-slot count
+    ``K``). Halo rows only ever carry exchange units, which fold onto
+    the *owner* cell's global entry — each shipped slot is counted
+    exactly once. Returns the engine's ``device_cell_work_last``
+    contract dict.
+    """
+    rows = np.asarray(cell_rows, np.float64)
+    nranks = rows.shape[0]
+    cells = np.zeros((ncells, N_CELL_COLS), np.float64)
+    per_rank = np.zeros((nranks, N_CELL_COLS), np.float64)
+    for r in range(nranks):
+        own = np.asarray(owned[r], np.int64)
+        hal = np.asarray(halo[r], np.int64) if r < len(halo) else \
+            np.zeros(0, np.int64)
+        np.add.at(cells, own, rows[r, :len(own)])
+        if len(hal):
+            np.add.at(cells, hal, rows[r, K:K + len(hal)])
+        per_rank[r] = rows[r].sum(axis=0)
+    return {"columns": list(CELL_COLUMNS), "cells": cells,
+            "per_rank": per_rank}
+
+
+def cell_work_record(cell_work: Optional[Dict[str, object]]) \
+        -> Optional[Dict[str, object]]:
+    """Compact per-record shape for metrics schema v3: columns, per-rank
+    totals and global totals (the full per-cell vector stays on the
+    engine — JSONL records would balloon at ncells scale)."""
+    if not cell_work:
+        return None
+    per_rank = np.asarray(cell_work["per_rank"], np.float64)
+    cells = np.asarray(cell_work["cells"], np.float64)
+    return {
+        "columns": list(cell_work["columns"]),
+        "per_rank": [[float(x) for x in row] for row in per_rank.tolist()],
+        "totals": [float(x) for x in cells.sum(axis=0).tolist()],
+        "ncells": int(cells.shape[0]),
+    }
 
 
 def combine(acc, row, xp=np):

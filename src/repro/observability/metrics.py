@@ -33,7 +33,15 @@ from typing import Dict
 #     and ``flight_dump`` on a sentinel trip. v1 readers that ignore
 #     unknown fields keep working; ``analysis/report.py`` upgrades v1
 #     records on read (``upgrade_record``).
-METRICS_SCHEMA_VERSION = 2
+# v3 (PR 10): per-cell cost attribution — ``cell_work`` (per-rank /
+#     total work units by task kind, computed per owned cell inside the
+#     compiled programs and folded on the host), ``cost_calibration``
+#     (the TaskCostLedger's jointly-fitted per-kind rates + confidence
+#     + window residual), ``advisor`` (repartition advisor's
+#     current/candidate/advised imbalance + accepted flag), and
+#     ``cost_ratios``/``observed_units`` now always present (empty dict
+#     before any observation). ``upgrade_record`` chains v1→v2→v3.
+METRICS_SCHEMA_VERSION = 3
 
 
 class MetricsRegistry:

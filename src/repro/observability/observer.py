@@ -95,6 +95,13 @@ class RunObserver:
         self.flight = FlightRecorder(spec.flight_cycles)
         self._cycle_marks = deque(maxlen=max(int(spec.flight_cycles), 1))
         self._last_energy: Optional[float] = None
+        # cost-attribution pipeline (schema v3): ledger of measured
+        # (units-by-kind, seconds) samples driving CostModel.calibrate,
+        # plus the repartition advisor replaying decompose_cells against
+        # measured cell weights — both built lazily on first use
+        self._ledger = None
+        self._advisor = None
+        self._advisor_failed = False
 
     # ---------------------------------------------------------- per cycle
     def end_cycle(self, sim, stats: Dict[str, Any]) -> Dict[str, Any]:
@@ -207,8 +214,14 @@ class RunObserver:
                 pass
 
         # ---- device metrics: the in-program telemetry row the engine
-        # accumulated on device and pulled once this cycle (schema v2)
+        # accumulated on device and pulled once this cycle (schema v2),
+        # plus the per-cell work vectors riding the same pull (schema v3)
         dmx = getattr(eng, "device_metrics_last", None)
+        cell_work = getattr(eng, "device_cell_work_last", None) \
+            if self.spec.device_metrics else None
+        rec["cell_work"] = dm.cell_work_record(cell_work)
+        rec["cost_calibration"] = None
+        rec["advisor"] = None
         if self.spec.device_metrics and dmx is not None:
             counts, values = dmx
             summary = dm.summarize(counts, values)
@@ -231,19 +244,26 @@ class RunObserver:
             tripped = bool(summary["tripped"]) or drift
             rec["health"] = {"flags": summary["flags"],
                              "energy_drift": drift, "tripped": tripped}
-            # fully fused runs have no per-phase spans — apportion the
-            # deduped fused-program wall across phases by the
-            # device-measured work units so measured_vs_modelled() still
-            # refines per-kind rates
+            # fully fused runs have no per-phase spans — feed the cost
+            # ledger one aggregate (units-by-kind, fused wall) sample:
+            # it keeps CostModel.observe flowing (unit-share
+            # apportioning, so measured_vs_modelled refines from cycle
+            # one) and re-runs the joint CostModel.calibrate() fit over
+            # its sample window each cycle
             if "density" not in phase_wall and hasattr(cm, "observe"):
                 fused_wall = sum(dedup_wall.get(n, 0.0)
                                  for n in ("fused_substep", "fused_final"))
-                tot = du["density"] + du["force"]
-                if fused_wall > 0 and tot > 0:
-                    for kind in ("density", "force"):
-                        if du[kind] > 0:
-                            cm.observe(kind, du[kind],
-                                       fused_wall * du[kind] / tot)
+                if fused_wall > 0:
+                    if cell_work is not None:
+                        totals = np.asarray(
+                            cell_work["per_rank"], np.float64).sum(axis=0)
+                        units = {k: float(v) for k, v in
+                                 zip(cell_work["columns"], totals)}
+                    else:
+                        units = {k: float(du.get(k, 0.0))
+                                 for k in ("density", "force", "exchange")}
+                    rec["cost_calibration"] = self._get_ledger(cm).record(
+                        units, fused_wall)
             self.flight.record(self.cycle, counts, values)
             if tripped:
                 reason = drift and "energy-drift" or next(
@@ -251,11 +271,38 @@ class RunObserver:
                      summary["flags"].items() if v), "sentinel")
                 rec["flight_dump"] = self.dump_flight(reason=reason)
 
-        # ---- cost-model feedback summary
-        if hasattr(cm, "measured_vs_modelled"):
-            rec["cost_ratios"] = cm.measured_vs_modelled()
-            rec["observed_units"] = {k: cm.observed_units(k)
-                                     for k in cm.observed}
+        # ---- repartition advisor: replay the graph partitioner against
+        # the measured per-cell weights (advisory only — nothing moves;
+        # PR-11's device-side migration consumes this series)
+        if cell_work is not None and hasattr(eng, "_assignment") \
+                and int(getattr(eng, "nranks", 1)) > 1:
+            advisor = self._get_advisor(eng)
+            if advisor is not None:
+                try:
+                    ledger = self._get_ledger(cm)
+                    weights = ledger.cell_weights(cell_work)
+                    adv = advisor.advise(eng._assignment, weights)
+                    rec["advisor"] = {
+                        "current_imbalance":
+                            float(adv["current_imbalance"]),
+                        "candidate_imbalance":
+                            float(adv["candidate_imbalance"]),
+                        "advised_imbalance":
+                            float(adv["advised_imbalance"]),
+                        "accepted": bool(adv["accepted"]),
+                        "per_cell_ratio": ledger.per_cell_ratio(
+                            cell_work, advisor.modelled_weights),
+                    }
+                except Exception:   # diagnostics must never kill the run
+                    pass
+
+        # ---- cost-model feedback summary (always present: the schema-v3
+        # record carries these keys even before any observation lands)
+        rec["cost_ratios"] = cm.measured_vs_modelled() \
+            if hasattr(cm, "measured_vs_modelled") else {}
+        rec["observed_units"] = (
+            {k: cm.observed_units(k) for k in cm.observed}
+            if hasattr(cm, "observed_units") else {})
 
         self._update_registry(rec)
         if self.spec.metrics:
@@ -263,6 +310,42 @@ class RunObserver:
             self.records.append(jsonify(rec))
         self.cycle += 1
         return rec
+
+    # ------------------------------------------------- cost attribution
+    def _get_ledger(self, cm):
+        """The run's TaskCostLedger, bound to the resolved cost model on
+        first use (the model is stable per run)."""
+        if self._ledger is None:
+            from .costs import TaskCostLedger
+            self._ledger = TaskCostLedger(cm)
+        return self._ledger
+
+    def _get_advisor(self, eng):
+        """Build the repartition advisor once from the engine's grid and
+        pair structure (structure changes rarely; weights every cycle).
+        Engines without the required surface (spec/pairs/_assignment)
+        simply get no advisor block."""
+        if self._advisor is not None or self._advisor_failed:
+            return self._advisor
+        try:
+            spec = getattr(eng, "spec", None)
+            pairs = getattr(eng, "pairs", None)
+            nranks = int(getattr(eng, "nranks", 1))
+            if spec is None or pairs is None or nranks <= 1:
+                self._advisor_failed = True
+                return None
+            from ..sph.engine import build_taskgraph
+            from .costs import RepartitionAdvisor
+            occ = np.asarray(eng.state.cells.mask).sum(axis=1) \
+                .astype(np.int64)
+            g = build_taskgraph(spec, pairs, occ,
+                                getattr(eng, "_cost_model", None))
+            self._advisor = RepartitionAdvisor(
+                g, spec.ncells, nranks,
+                seed=int(getattr(eng, "_seed", 0)))
+        except Exception:       # diagnostics must never kill the run
+            self._advisor_failed = True
+        return self._advisor
 
     # ------------------------------------------------------ flight recorder
     def dump_flight(self, *, reason: str,
@@ -304,6 +387,13 @@ class RunObserver:
         if du:
             for kind, units in du.items():
                 reg.inc(f"device_units_{kind}", units)
+        adv = rec.get("advisor")
+        if adv:
+            reg.gauge("advisor_current_imbalance", adv["current_imbalance"])
+            reg.gauge("advisor_advised_imbalance", adv["advised_imbalance"])
+        cal = rec.get("cost_calibration")
+        if cal and cal.get("residual") is not None:
+            reg.gauge("calibration_residual", cal["residual"])
         health = rec.get("health")
         if health:
             reg.inc("sentinel_trips", 1 if health["tripped"] else 0)

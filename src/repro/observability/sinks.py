@@ -158,24 +158,54 @@ def write_metrics_jsonl(path: str, records: Iterable[Dict[str, Any]]) -> None:
             f.write(json.dumps(jsonify(rec)) + "\n")
 
 
-def upgrade_record(rec: Dict[str, Any]) -> Dict[str, Any]:
-    """Normalise a metrics record to the schema-v2 shape.
-
-    v1 records (PR 5) predate the device-metrics block; readers that
-    branch on the new fields (``analysis/report.py``, the flight-bundle
-    tools) call this so a v1 log renders through the same code path —
-    the added fields are explicit "not measured" markers, and the
-    original schema number is preserved under ``schema_original``.
-    """
-    if rec.get("schema", 1) >= 2:
-        return rec
-    up = dict(rec)
-    up["schema_original"] = up.get("schema", 1)
-    up["schema"] = 2
+def _v1_to_v2(up: Dict[str, Any]) -> None:
+    """v2 (PR 7) added the device-metrics block; absent on v1 records."""
     up.setdefault("device_metrics", None)
     up.setdefault("device_phase_units", None)
     up.setdefault("device_imbalance", None)
     up.setdefault("health", None)
+
+
+def _v2_to_v3(up: Dict[str, Any]) -> None:
+    """v3 (PR 10) added per-cell cost attribution / calibration /
+    advisor blocks and made the cost-feedback dicts always present."""
+    up.setdefault("cell_work", None)
+    up.setdefault("cost_calibration", None)
+    up.setdefault("advisor", None)
+    up.setdefault("cost_ratios", {})
+    up.setdefault("observed_units", {})
+
+
+_UPGRADES = {1: _v1_to_v2, 2: _v2_to_v3}
+
+
+def upgrade_record(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """Normalise a metrics record to the current schema shape, chaining
+    one version step at a time (v1→v2→v3).
+
+    Older records predate newer blocks; readers that branch on them
+    (``analysis/report.py``, the flight-bundle tools) call this so any
+    supported log renders through the same code path — the added fields
+    are explicit "not measured" markers, and the original schema number
+    is preserved under ``schema_original``. A record claiming a schema
+    *newer* than this build understands is rejected loudly rather than
+    mis-rendered.
+    """
+    from .metrics import METRICS_SCHEMA_VERSION
+    ver = int(rec.get("schema", 1))
+    if ver > METRICS_SCHEMA_VERSION:
+        raise ValueError(
+            f"metrics record has schema {ver}, newer than this build's "
+            f"{METRICS_SCHEMA_VERSION} — upgrade the reader, not the "
+            f"record")
+    if ver >= METRICS_SCHEMA_VERSION:
+        return rec
+    up = dict(rec)
+    up["schema_original"] = ver
+    while ver < METRICS_SCHEMA_VERSION:
+        _UPGRADES[ver](up)
+        ver += 1
+    up["schema"] = ver
     return up
 
 

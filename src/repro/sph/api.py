@@ -443,16 +443,31 @@ class _LocalGlobal(_SimulationBase):
             c = st.cells
             mask = np.asarray(c.mask)
             counts, values = dmetrics.zero_rows(1)
+            npairs = int(np.asarray(eng.pairs.ci).shape[0])
             _global_metrics_row(counts, values, 0,
                                 nreal=int((mask > 0).sum()),
-                                npairs=int(np.asarray(eng.pairs.ci).shape[0]))
+                                npairs=npairs)
             dmetrics.state_health(mask, np.asarray(c.vel), np.asarray(c.u),
                                   np.asarray(st.rho), np.asarray(c.mass),
                                   counts, values, rank=0)
+            # per-cell attribution: density/force charged at the pair's
+            # i-cell, drift = alive particles per cell (all active on the
+            # global-dt path), no exchange on a single rank.
+            cDI = dmetrics.CELL_INDEX
+            cellw, cellw_rank = dmetrics.zero_cell_work(mask.shape[0], 1)
+            ci = np.asarray(eng.pairs.ci)
+            np.add.at(cellw[:, cDI["density"]], ci, 1.0)
+            np.add.at(cellw[:, cDI["force"]], ci, 1.0)
+            cellw[:, cDI["drift"]] += (mask > 0).sum(axis=1)
+            cellw_rank[0] = cellw.sum(axis=0)
+            eng.device_cell_work_last = {
+                "columns": list(dmetrics.CELL_COLUMNS),
+                "cells": cellw, "per_rank": cellw_rank}
             eng.device_metrics_last = (counts, values)
             eng.device_metrics_pulls += 1
         else:
             eng.device_metrics_last = None
+            eng.device_cell_work_last = None
         return {"t": self.time, "dt": dt, "wall": sp.elapsed}
 
     def diagnostics(self):
@@ -557,18 +572,49 @@ class _DistGlobal(_SimulationBase):
             rho = np.asarray(eng.rho).reshape(nd, K, -1)
             mass = np.asarray(eng.dcells.mass).reshape(nd, K, -1)
             counts, values = dmetrics.zero_rows(nd)
+            # slot -> global cell id per device (storage assigns owned
+            # slots in ascending cell order; padded slots land on cell 0
+            # but only ever receive zero-valued adds).
+            assignment = np.asarray(plan.assignment)
+            storage = np.asarray(plan.storage)
+            ncells = len(assignment)
+            slot_cell = np.zeros((nd, K), np.int64)
+            slot_cell[assignment, storage] = np.arange(ncells)
+            cDI = dmetrics.CELL_INDEX
+            cellw, cellw_rank = dmetrics.zero_cell_work(ncells, nd)
             for r in range(nd):
+                npairs = int(plan.pair_w[r].sum())
+                nslots = int(plan.export_valid[r].sum())
                 _global_metrics_row(
                     counts, values, r,
                     nreal=int((mask[r] > 0).sum()),
-                    npairs=int(plan.pair_w[r].sum()),
-                    nslots=int(plan.export_valid[r].sum()))
+                    npairs=npairs, nslots=nslots)
                 dmetrics.state_health(mask[r], vel[r], u[r], rho[r],
                                       mass[r], counts, values, rank=r)
+                # density/force: one unit per valid directed pair entry,
+                # charged at the receiver's owned cell; exchange: one unit
+                # per valid export slot; drift: alive per owned slot.
+                pw = np.asarray(plan.pair_w[r]) > 0
+                recv_cells = slot_cell[r, np.asarray(plan.pair_recv[r])[pw]]
+                np.add.at(cellw[:, cDI["density"]], recv_cells, 1.0)
+                np.add.at(cellw[:, cDI["force"]], recv_cells, 1.0)
+                ev = np.asarray(plan.export_valid[r]) > 0
+                exp_cells = slot_cell[r, np.asarray(plan.export_slots[r])[ev]]
+                np.add.at(cellw[:, cDI["exchange"]], exp_cells, 1.0)
+                alive_r = (mask[r] > 0).sum(axis=1).astype(np.float64)
+                np.add.at(cellw[:, cDI["drift"]], slot_cell[r], alive_r)
+                cellw_rank[r, cDI["density"]] += npairs
+                cellw_rank[r, cDI["force"]] += npairs
+                cellw_rank[r, cDI["exchange"]] += nslots
+                cellw_rank[r, cDI["drift"]] += int((mask[r] > 0).sum())
+            eng.device_cell_work_last = {
+                "columns": list(dmetrics.CELL_COLUMNS),
+                "cells": cellw, "per_rank": cellw_rank}
             eng.device_metrics_last = (counts, values)
             eng.device_metrics_pulls += 1
         else:
             eng.device_metrics_last = None
+            eng.device_cell_work_last = None
         return {"t": self._time, "dt": dt, "wall": sp.elapsed}
 
     def diagnostics(self):

@@ -331,7 +331,18 @@ def build_fused_substep_program(mesh, axis: str, *, mode: str,
             pair_cut=jnp.sum(tbl["cut_valid"] > 0),
             exch_slots=nslots * nexch, exch_bytes=nslots * slot_bytes,
             deepened=deepened, woken=woken, kicked=kicked)
-        met = {"counts": met_counts[None], "values": met_values[None]}
+        # per-cell attribution rides in the same unconditional output
+        # pytree (new dict key, same out_specs): owned-row sums equal the
+        # drift/density/force columns above, all-row exchange sums equal
+        # exchange_units — the identities the 4-rank acceptance pins
+        met_cells = dmetrics.measure_cells(
+            nrows=nrows, K=K, mask=st.cells.mask[:K], pmask=pmask,
+            ci=tbl["ci"], cj=tbl["cj"],
+            exch_rows=(tbl["e_unpack"] if mode == "ppermute"
+                       else tbl["e_urows"]),
+            exch_valid=tbl["e_valid"], nexch=nexch)
+        met = {"counts": met_counts[None], "values": met_values[None],
+               "cells": met_cells[None]}
         out = {k: getattr(st.cells, k) for k in STATE_CELL_FIELDS}
         out.update({k: getattr(st, k) for k in STATE_AUX_FIELDS})
         out["time"] = st.time
@@ -474,9 +485,10 @@ def build_cycle_scan_program(mesh, axis: str, *, mode: str,
         met_c0 = jnp.zeros((len(dmetrics.COUNT_COLUMNS),), jnp.int32)
         met_v0 = jnp.zeros((len(dmetrics.VALUE_COLUMNS),), jnp.float32)
         met_v0 = met_v0.at[dmetrics.VALUE_INDEX["min_rho"]].set(jnp.inf)
+        met_w0 = jnp.zeros((nrows, dmetrics.N_CELL_COLS), jnp.float32)
 
         def trip(carry, n):
-            st, drifted_to, cnt, met_c, met_v = carry
+            st, drifted_to, cnt, met_c, met_v, met_w = carry
             mask = st.cells.mask
             maskb = mask > 0
             level = jnp.maximum(depth - tz[n], 0)
@@ -571,30 +583,39 @@ def build_cycle_scan_program(mesh, axis: str, *, mode: str,
                 exch_slots=n_slots * nexch,
                 exch_bytes=n_slots * slot_bytes,
                 deepened=deepened, woken=woken, kicked=kicked)
+            mrow_w = dmetrics.measure_cells(
+                nrows=nrows, K=K, mask=stN.cells.mask[:K], pmask=pm,
+                ci=ci, cj=cj,
+                exch_rows=(tbl["e_unpack"] if mode == "ppermute"
+                           else tbl["e_urows"]),
+                exch_valid=ev, nexch=nexch)
             met_c_new = met_c + jnp.where(live, mrow_c, 0)
             met_v_new = fold_values(met_v, mrow_v, live)
+            met_w_new = met_w + jnp.where(live, mrow_w, 0.0)
             # ---- dead trips keep every carry bit-identical
             stO = jax.tree_util.tree_map(
                 lambda new, old: jnp.where(live, new, old), stN, st)
             drifted_new = jnp.where(live, n, drifted_to)
-            return (stO, drifted_new, cnt_new, met_c_new, met_v_new), None
+            return (stO, drifted_new, cnt_new, met_c_new, met_v_new,
+                    met_w_new), None
 
         xs = jnp.arange(1, nsub_static + 1, dtype=jnp.int32)
-        carry0 = (st0, jnp.int32(0), cnt0, met_c0, met_v0)
+        carry0 = (st0, jnp.int32(0), cnt0, met_c0, met_v0, met_w0)
         if _SCAN_UNROLL:        # debug hook: straight-line trips
             carry = carry0
             for n in range(1, nsub_static + 1):
                 carry, _ = trip(carry, jnp.int32(n))
-            stE, _, cnt, met_c, met_v = carry
+            stE, _, cnt, met_c, met_v, met_w = carry
         else:
-            (stE, _, cnt, met_c, met_v), _ = jax.lax.scan(
+            (stE, _, cnt, met_c, met_v, met_w), _ = jax.lax.scan(
                 trip, carry0, xs, unroll=nsub_static)
         out = {k: getattr(stE.cells, k) for k in STATE_CELL_FIELDS}
         out.update({k: getattr(stE, k) for k in STATE_AUX_FIELDS})
         out["time"] = stE.time
         cnt_out = {k: v[None] for k, v in cnt.items()}
         cnt_out["t_end"] = stE.time[None]
-        met = {"counts": met_c[None], "values": met_v[None]}
+        met = {"counts": met_c[None], "values": met_v[None],
+               "cells": met_w[None]}
         return ({k: v[None] for k, v in out.items()}, cnt_out, met)
 
     fn = shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis), P(axis)),

@@ -334,6 +334,11 @@ class DistTimeBinSimulation(TimeBinSimulation):
         self.device_metrics_last: Optional[Tuple[np.ndarray,
                                                  np.ndarray]] = None
         self.device_metrics_pulls = 0
+        # per-cell attribution of the last pulled cycle (device-metrics
+        # v2): {"columns", "cells" (ncells, C) float64, "per_rank"
+        # (nranks, C)} or None — the TaskCostLedger / repartition-advisor
+        # contract. Rides in the same once-per-cycle metrics transfer.
+        self.device_cell_work_last: Optional[Dict] = None
         # schedule="device": whole K-cycle segments run as compiled
         # programs; run_cycle() pops one cycle's stats per call from this
         # queue. A segment aborts back to the host-scheduled ladder
@@ -560,6 +565,7 @@ class DistTimeBinSimulation(TimeBinSimulation):
                 # adopting it here is free (no extra transfer entry)
                 self.device_metrics_last = stats.pop("_met")
                 self.device_metrics_pulls += 1
+                self.device_cell_work_last = stats.pop("_cellw", None)
             self.cycle_index += 1
             return stats
         with tr.timed("cycle") as cyc:
@@ -639,17 +645,26 @@ class DistTimeBinSimulation(TimeBinSimulation):
         }
 
     # ------------------------------------------------- device-metrics pull
-    def _metrics_pull(self, counts, values) -> None:
+    def _metrics_pull(self, counts, values, cells=None,
+                      plan: Optional[RankPlan] = None) -> None:
         """Adopt one cycle's accumulated telemetry row: pull it to host —
         ONE ledgered boundary transfer per cycle (the acceptance bound
         ``benchmarks/observability_bench.py`` reports) — and expose it as
         ``device_metrics_last`` for the observer's end-of-cycle merge.
-        Must run inside ``run_cycle`` so the transfer ledger the observer
-        copies verbatim already contains this pull."""
+        The per-cell work buffer (``cells``, stacked device rows) rides in
+        the same transfer and is folded onto global cells via the plan's
+        row maps into ``device_cell_work_last``. Must run inside
+        ``run_cycle`` so the transfer ledger the observer copies verbatim
+        already contains this pull."""
         counts_h = np.asarray(counts)
         values_h = np.asarray(values)
-        self.transfers.record("metrics", counts_h.nbytes + values_h.nbytes,
-                              boundary=True)
+        nbytes = counts_h.nbytes + values_h.nbytes
+        if cells is not None and plan is not None:
+            cells_h = np.asarray(cells)
+            nbytes += cells_h.nbytes
+            self.device_cell_work_last = dmetrics.fold_cell_rows(
+                cells_h, plan.owned, plan.halo, self.spec.ncells, plan.K)
+        self.transfers.record("metrics", nbytes, boundary=True)
         self.device_metrics_pulls += 1
         self.device_metrics_last = (counts_h, values_h)
 
@@ -700,6 +715,36 @@ class DistTimeBinSimulation(TimeBinSimulation):
         alive_per_rank = [int((mask_host[plan.owned[r]] > 0).sum())
                           if len(plan.owned[r]) else 0
                           for r in range(plan.nranks)]
+        # per-cell attribution (device-metrics v2): same owned-endpoint
+        # rule as the device scatter, accumulated host-side from the pair
+        # selections the ladder already computes. The per-rank exchange
+        # column here is receiver-side truth (the value column's
+        # ``nship // nranks`` split stays approximate on this path).
+        cDI = dmetrics.CELL_INDEX
+        cellw = cellw_rank = None
+        if dm_on:
+            cellw, cellw_rank = dmetrics.zero_cell_work(
+                self.spec.ncells, plan.nranks)
+            alive_cell = (mask_host > 0).sum(axis=1).astype(np.float64)
+
+        def attribute_cells(idxs_r, ship_cells, nexch):
+            for r in range(plan.nranks):
+                gi = self._ci[idxs_r[r]]
+                gj = self._cj[idxs_r[r]]
+                tgt = np.where(self._assignment[gi] == r, gi, gj)
+                np.add.at(cellw[:, cDI["density"]], tgt, 1.0)
+                np.add.at(cellw[:, cDI["force"]], tgt, 1.0)
+                cellw_rank[r, cDI["density"]] += len(tgt)
+                cellw_rank[r, cDI["force"]] += len(tgt)
+                own = plan.owned[r]
+                if len(own):
+                    cellw[own, cDI["drift"]] += alive_cell[own]
+                cellw_rank[r, cDI["drift"]] += alive_per_rank[r]
+            for c in ship_cells:
+                _, _, imps = plan.cut[c]
+                cellw[c, cDI["exchange"]] += nexch * len(imps)
+                for (ir, _) in imps:
+                    cellw_rank[ir, cDI["exchange"]] += nexch
 
         # per-cycle host caches: the extended wake floors are rebuilt only
         # when the wake floor itself changes (a wake-up or deepening), not
@@ -839,6 +884,9 @@ class DistTimeBinSimulation(TimeBinSimulation):
                     met_values[r, mVI["force_units"]] += nlive
                     met_values[r, mVI["exchange_units"]] += sslots
                     met_values[r, mVI["kick_units"]] += act_r
+                attribute_cells(self._select_rank_pairs(plan,
+                                                        active_cells)[0],
+                                ship, 2.0)
 
         # final sync sub-step: everyone active, full pair lists, full cut
         dt_d = jnp.float32((nsub - drifted_to) * dt_min)
@@ -899,6 +947,8 @@ class DistTimeBinSimulation(TimeBinSimulation):
                 met_values[r, mVI["force_units"]] += nlive
                 met_values[r, mVI["exchange_units"]] += fslots
                 met_values[r, mVI["kick_units"]] += alive_per_rank[r]
+            attribute_cells(self._select_rank_pairs(plan, None)[0],
+                            list(plan.cut) if plan.cut else [], 1.0)
 
         tg = tr.now() if tr.enabled else 0.0
         self._gather_state(plan, states)
@@ -906,9 +956,13 @@ class DistTimeBinSimulation(TimeBinSimulation):
             tr.record_all(range(plan.nranks), "gather", tg, collective=1)
         if dm_on:
             self._mirror_metrics_finish(plan, met_counts, met_values)
+            self.device_cell_work_last = {
+                "columns": list(dmetrics.CELL_COLUMNS),
+                "cells": cellw, "per_rank": cellw_rank}
             self._metrics_pull(met_counts, met_values)
         else:
             self.device_metrics_last = None
+            self.device_cell_work_last = None
         return {"updates": updates, "pair_tasks": pair_tasks,
                 "force_substeps": force_substeps,
                 "cycle_exported": cycle_exported,
@@ -1146,6 +1200,7 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
         dm_on = self.device_metrics_enabled
         met_acc: List = []          # one (counts, values) device-ref cell
+        cell_acc: List = []         # one stacked per-cell buffer device ref
 
         def run_fused(tables, sig, scalars, final):
             prog = self._fused_program(sig, final=final)
@@ -1157,10 +1212,12 @@ class DistTimeBinSimulation(TimeBinSimulation):
                 row = (met["counts"], met["values"])
                 if not met_acc:
                     met_acc.append(row)
+                    cell_acc.append(met["cells"])
                 else:
                     # eager device-side fold of the tiny rows: no host
                     # sync, no registered program, no extra compile
                     met_acc[0] = dmetrics.combine(met_acc[0], row, jnp)
+                    cell_acc[0] = cell_acc[0] + met["cells"]
             return changed
 
         for n in range(1, nsub):
@@ -1251,9 +1308,11 @@ class DistTimeBinSimulation(TimeBinSimulation):
 
         if dm_on and met_acc:
             # one pull per cycle: the whole accumulated telemetry row
-            self._metrics_pull(*met_acc[0])
+            # (per-cell buffer included — same single boundary transfer)
+            self._metrics_pull(*met_acc[0], cells=cell_acc[0], plan=plan)
         elif not dm_on:
             self.device_metrics_last = None
+            self.device_cell_work_last = None
 
         tg = tr.now() if tr.enabled else 0.0
         self._gather_resident(plan, res)
@@ -1451,14 +1510,15 @@ class DistTimeBinSimulation(TimeBinSimulation):
         # device-planned scalars and sentinel flags
         pulled_cnt = [{k: np.asarray(v) for k, v in c.items()}
                       for c in per_cnt]
-        pulled_met = [(np.asarray(m["counts"]), np.asarray(m["values"]))
-                      for m in per_met]
+        pulled_met = [(np.asarray(m["counts"]), np.asarray(m["values"]),
+                       np.asarray(m["cells"])) for m in per_met]
         pulled_scal = [{k: np.asarray(v) for k, v in s.items()}
                        for s in per_scal]
         pulled_flags = [{k: np.asarray(v) for k, v in f.items()}
                         for f in per_flags]
         nbytes = sum(a.nbytes for grp in pulled_cnt for a in grp.values())
-        nbytes += sum(c.nbytes + v.nbytes for c, v in pulled_met)
+        nbytes += sum(c.nbytes + v.nbytes + w.nbytes
+                      for c, v, w in pulled_met)
         nbytes += sum(a.nbytes for grp in pulled_scal for a in grp.values())
         nbytes += sum(a.nbytes for grp in pulled_flags
                       for a in grp.values())
@@ -1469,7 +1529,7 @@ class DistTimeBinSimulation(TimeBinSimulation):
         sentinels = sum(
             int(c[:, mci["flag_nan"]].sum() + c[:, mci["flag_inf"]].sum()
                 + c[:, mci["flag_neg_rho"]].sum())
-            for c, _ in pulled_met)
+            for c, _, _ in pulled_met)
         crossed = sum(int(f["crossed"][0]) for f in pulled_flags)
         over = sum(int(f["capacity"][0]) for f in pulled_flags)
         if sentinels or crossed or over:
@@ -1533,10 +1593,14 @@ class DistTimeBinSimulation(TimeBinSimulation):
                 "segment_cycles": K_cycles,
             }
             if dm_on:
-                stats["_met"] = pulled_met[j]
+                stats["_met"] = pulled_met[j][:2]
+                stats["_cellw"] = dmetrics.fold_cell_rows(
+                    pulled_met[j][2], plan.owned, plan.halo,
+                    self.spec.ncells, plan.K)
             stats_list.append(stats)
         if not dm_on:
             self.device_metrics_last = None
+            self.device_cell_work_last = None
         return stats_list
 
     def _replay_segment_host(self, K_cycles: int) -> List[Dict]:

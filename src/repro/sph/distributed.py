@@ -446,6 +446,7 @@ class DistSimulation:
         self.device_metrics_enabled = False
         self.device_metrics_last = None
         self.device_metrics_pulls = 0
+        self.device_cell_work_last = None
 
     def step(self, dt: float):
         with self.mesh:

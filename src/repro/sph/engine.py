@@ -342,6 +342,7 @@ class Simulation:
         self.device_metrics_enabled = False
         self.device_metrics_last = None
         self.device_metrics_pulls = 0
+        self.device_cell_work_last = None
 
     def _rebin(self, pos, vel, mass, u, h):
         self.cells, self.perm = bin_particles(self.spec, pos, vel, mass, u, h)

@@ -557,6 +557,9 @@ class TimeBinSimulation:
         self.device_metrics_last: Optional[Tuple[np.ndarray,
                                                  np.ndarray]] = None
         self.device_metrics_pulls = 0
+        # per-cell work attribution of the last cycle (device-metrics v2
+        # contract shared with the distributed engines) or None
+        self.device_cell_work_last: Optional[Dict] = None
 
     # ------------------------------------------------------------- plumbing
     def _rebin(self, pos, vel, mass, u, h):
@@ -735,6 +738,22 @@ class TimeBinSimulation:
         dm_on = self.device_metrics_enabled
         met_counts, met_values = dmetrics.zero_rows(1)
         mVI = dmetrics.VALUE_INDEX
+        cellw = cellw_rank = None
+        if dm_on:
+            # per-cell attribution: single-rank flavour of the distributed
+            # owned-endpoint rule — every pair charges its ci cell, drift
+            # is the alive count per cell, exchange is zero (no halo)
+            cellw, cellw_rank = dmetrics.zero_cell_work(self.spec.ncells, 1)
+            cDI = dmetrics.CELL_INDEX
+            alive_cell = (mask_host > 0).sum(axis=1).astype(np.float64)
+
+            def attribute_cells(pair_idx):
+                np.add.at(cellw[:, cDI["density"]], self._ci[pair_idx], 1.0)
+                np.add.at(cellw[:, cDI["force"]], self._ci[pair_idx], 1.0)
+                cellw[:, cDI["drift"]] += alive_cell
+                cellw_rank[0, cDI["density"]] += len(pair_idx)
+                cellw_rank[0, cDI["force"]] += len(pair_idx)
+                cellw_rank[0, cDI["drift"]] += nreal
         for n in range(1, nsub):
             level = active_level(n, depth)
             active_p = ((bins_h >= level)
@@ -786,6 +805,9 @@ class TimeBinSimulation:
                 met_values[0, mVI["density_units"]] += nlive
                 met_values[0, mVI["force_units"]] += nlive
                 met_values[0, mVI["kick_units"]] += int(nact)
+                acells = active_p.any(axis=1)
+                attribute_cells(np.nonzero(acells[self._ci]
+                                           | acells[self._cj])[0])
         if tr.enabled:
             tr.ctx["substep"] = nsub
         with tr.span("drift", units=nreal):
@@ -808,6 +830,7 @@ class TimeBinSimulation:
             met_values[0, mVI["density_units"]] += len(self._ci)
             met_values[0, mVI["force_units"]] += len(self._ci)
             met_values[0, mVI["kick_units"]] += nreal
+            attribute_cells(np.arange(len(self._ci)))
             c = state.cells
             dmetrics.state_health(np.asarray(c.mask), np.asarray(c.vel),
                                   np.asarray(c.u), np.asarray(state.rho),
@@ -815,8 +838,12 @@ class TimeBinSimulation:
                                   met_values, rank=0)
             self.device_metrics_last = (met_counts, met_values)
             self.device_metrics_pulls += 1
+            self.device_cell_work_last = {
+                "columns": list(dmetrics.CELL_COLUMNS),
+                "cells": cellw, "per_rank": cellw_rank}
         else:
             self.device_metrics_last = None
+            self.device_cell_work_last = None
         self.state = state
         if self.rebin_each_cycle:
             with tr.span("rebin", units=nreal):

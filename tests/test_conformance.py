@@ -579,3 +579,47 @@ def test_device_metrics_four_rank_fused_rows():
     assert eng.transfers.stats()["boundary_events"]["metrics"] == NCYCLES
     # the fused run feeds measured per-phase work into the cost model
     assert {"density", "force"} <= set(rec["cost_ratios"])
+
+
+@requires4
+@pytest.mark.slow
+def test_per_cell_attribution_sums_to_phase_units_four_rank():
+    """4-rank fused run: the per-cell work vectors (schema v3) are exact —
+    per-rank owned-row sums equal the in-program value columns for
+    density/force/exchange and the drift-active count, with halo rows
+    folded onto owners (no double-counting)."""
+    from repro.observability import CELL_COLUMNS
+    from repro.observability import device_metrics as dm
+    spec = _timebin_spec("sedov", backend="distributed", ranks=4,
+                         transport="collective", residency="device",
+                         observe=True)
+    sim = build_simulation(spec)
+    _trajectory(sim)
+    eng = sim.engine
+    cw = eng.device_cell_work_last
+    assert cw is not None and list(cw["columns"]) == list(CELL_COLUMNS)
+    cells = np.asarray(cw["cells"], np.float64)
+    per_rank = np.asarray(cw["per_rank"], np.float64)
+    assert per_rank.shape[0] == 4
+    counts, values = (np.asarray(a) for a in eng.device_metrics_last)
+    cix = {k: i for i, k in enumerate(CELL_COLUMNS)}
+    # per-rank exactness, kind by kind: the scatter targets only owned
+    # rows, so each rank's fold reproduces its own value column
+    for kind in ("density", "force", "exchange"):
+        want = values[:, dm.VALUE_INDEX[f"{kind}_units"]]
+        got = per_rank[:, cix[kind]]
+        np.testing.assert_allclose(got, want, rtol=1e-6, err_msg=kind)
+    np.testing.assert_allclose(
+        per_rank[:, cix["drift"]],
+        counts[:, dm.COUNT_INDEX["drift_active"]], rtol=1e-6)
+    # folding halo rows onto owner cells conserves every column globally
+    np.testing.assert_allclose(cells.sum(axis=0), per_rank.sum(axis=0),
+                               rtol=1e-6)
+    assert (cells >= 0).all()
+    # the v3 record carries the compact block and the advisor ran
+    rec = sim.observer.records[-1]
+    assert rec["cell_work"] is not None
+    assert rec["cell_work"]["ncells"] == cells.shape[0]
+    assert rec["advisor"] is not None
+    assert rec["advisor"]["advised_imbalance"] \
+        <= rec["advisor"]["current_imbalance"] + 1e-9

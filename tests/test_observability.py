@@ -299,19 +299,231 @@ def test_trace_report_renders_timeline_and_tables(tmp_path):
 
 
 # ------------------------------------- device metrics / flight recorder
-def test_upgrade_record_v1_compat():
+def test_upgrade_record_chains_v1_to_v3():
     from repro.observability import upgrade_record
     v1 = {"schema": 1, "cycle": 3, "wall": 0.5, "imbalance": 1.2}
     up = upgrade_record(dict(v1))
-    assert up["schema"] == METRICS_SCHEMA_VERSION == 2
+    assert up["schema"] == METRICS_SCHEMA_VERSION == 3
     assert up["schema_original"] == 1
+    # the v1→v2 step's columns…
     for key in ("device_metrics", "device_phase_units",
                 "device_imbalance", "health"):
         assert key in up and up[key] is None
+    # …then the v2→v3 step's columns, applied in the same pass
+    for key in ("cell_work", "cost_calibration", "advisor"):
+        assert key in up and up[key] is None
+    assert up["cost_ratios"] == {} and up["observed_units"] == {}
     assert up["cycle"] == 3 and up["imbalance"] == 1.2
-    # v2 records pass through untouched
-    v2 = upgrade_record({"schema": 2, "device_imbalance": 1.1})
-    assert "schema_original" not in v2 and v2["device_imbalance"] == 1.1
+
+
+def test_upgrade_record_v2_to_v3_round_trip():
+    from repro.observability import upgrade_record
+    v2 = {"schema": 2, "cycle": 7, "device_imbalance": 1.1,
+          "health": {"tripped": False},
+          "cost_ratios": {"density": 1.5}}
+    up = upgrade_record(dict(v2))
+    assert up["schema"] == 3 and up["schema_original"] == 2
+    # v2 payload survives untouched; only the missing v3 columns appear
+    assert up["device_imbalance"] == 1.1
+    assert up["health"] == {"tripped": False}
+    assert up["cost_ratios"] == {"density": 1.5}
+    assert up["cell_work"] is None and up["advisor"] is None
+    # upgrading an already-current record is the identity
+    assert upgrade_record(dict(up)) == up
+
+
+def test_upgrade_record_rejects_newer_schema():
+    from repro.observability import upgrade_record
+    with pytest.raises(ValueError, match="newer"):
+        upgrade_record({"schema": METRICS_SCHEMA_VERSION + 1, "cycle": 0})
+    # tampered/nonsense versions that claim the future are refused too
+    with pytest.raises(ValueError):
+        upgrade_record({"schema": 99})
+
+
+def test_report_renders_dash_for_pre_v3_records():
+    from repro.analysis.report import advisor_trend, attribution_table
+    old = [{"schema": 1, "cycle": 0, "wall": 0.5},
+           {"schema": 2, "cycle": 1, "wall": 0.4,
+            "device_imbalance": 1.1}]
+    table = attribution_table(old)
+    assert "-" in table and "predates schema v3" in table
+    trend = advisor_trend(old)
+    lines = [ln for ln in trend.splitlines() if ln.strip()]
+    assert any(ln.split()[1] == "-" for ln in lines
+               if ln.split() and ln.split()[0].isdigit())
+    assert "no advisor records" in trend
+
+
+def test_cost_model_calibrate_recovers_rates():
+    rng = np.random.default_rng(0)
+    true = {"density": 4e-6, "force": 9e-6, "exchange": 1e-6}
+    samples = []
+    for _ in range(12):
+        units = {k: float(rng.uniform(1e3, 1e5)) for k in true}
+        secs = sum(true[k] * u for k, u in units.items())
+        samples.append((units, secs))
+    cm = CostModel(rates={"density": 1e-9})
+    cal = cm.calibrate(samples)
+    for kind, rate in true.items():
+        assert cal[kind]["rate"] == pytest.approx(rate, rel=1e-6)
+        assert cal[kind]["confidence"] == pytest.approx(1.0, abs=1e-6)
+    # fitted rates folded into the model's EMA stream
+    assert cm.rates["density"] > 1e-9
+
+
+def test_task_cost_ledger_warmup_residual_and_weights():
+    from repro.observability import TaskCostLedger
+    cm = CostModel(rates={"density": 1e-9})
+    led = TaskCostLedger(cm, skip_first=1)
+    # cycle 0: compile-dominated wall — observed, but not in the window
+    led.record({"density": 100.0, "force": 100.0}, 50.0)
+    assert led.snapshot()["nsamples"] == 0
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        # unit mixes must vary cycle to cycle or the kinds are collinear
+        # and only their joint rate is identifiable
+        u = {"density": float(rng.uniform(50, 500)),
+             "force": float(rng.uniform(50, 500))}
+        led.record(u, 4e-6 * u["density"] + 8e-6 * u["force"])
+    snap = led.snapshot()
+    assert snap["nsamples"] == 6
+    assert snap["residual"] is not None and snap["residual"] < 0.05
+    assert led.rate("density") == pytest.approx(4e-6, rel=1e-3)
+    assert led.rate("force") == pytest.approx(8e-6, rel=1e-3)
+    cell_work = {"columns": ["drift", "density", "force", "exchange"],
+                 "cells": np.array([[0.0, 10.0, 0.0, 0.0],
+                                    [0.0, 0.0, 10.0, 0.0]])}
+    w = led.cell_weights(cell_work)
+    assert w[1] / w[0] == pytest.approx(2.0, rel=1e-3)
+
+
+@pytest.mark.slow
+def test_calibration_band_on_traced_sedov():
+    """Acceptance: after warmup, the joint fit predicts the fused wall
+    of a traced Sedov run within a pinned band (the warmup cycle and
+    mid-run compile spikes are excluded from the window, like any
+    benchmark's warmup)."""
+    spec = _timebin_spec("sedov", backend="distributed", ranks=1,
+                         transport="collective", residency="device",
+                         observe=True)
+    sim = build_simulation(spec)
+    for _ in range(5):
+        sim.step()
+    cal = sim.observer.records[-1]["cost_calibration"]
+    assert cal is not None and cal["kinds"]
+    assert cal["nsamples"] >= 2
+    assert cal["residual"] is not None and cal["residual"] < 0.5
+    assert all(v["rate"] >= 0 for v in cal["kinds"].values())
+
+
+def test_weighted_imbalance_counts_empty_ranks():
+    from repro.observability import weighted_imbalance
+    # all weight on rank 0 of 4 → max/mean = 4
+    assert weighted_imbalance([0, 0], [1.0, 1.0], 4) \
+        == pytest.approx(4.0)
+    assert weighted_imbalance([0, 1], [1.0, 1.0], 2) \
+        == pytest.approx(1.0)
+
+
+@pytest.mark.slow
+def test_advisor_improves_clustered_imbalance():
+    """Acceptance: on a clustered scenario the advisor's replay of the
+    partitioner with *measured* weights never reports worse than the
+    current partition, and actually improves it."""
+    spec = SimulationSpec(
+        scenario="clustered", scenario_params={"n": 96, "seed": 0},
+        physics=SPHConfig(alpha_visc=1.0, cfl=0.15),
+        dt_max=0.02, max_depth=3, integrator="timebin",
+        backend="distributed", ranks=4, transport="host",
+        observe=True)
+    sim = build_simulation(spec)
+    advs = []
+    for _ in range(2):
+        sim.step()
+        rec = sim.observer.records[-1]
+        assert rec["cell_work"] is not None
+        adv = rec["advisor"]
+        assert adv is not None
+        advs.append(adv)
+        assert adv["advised_imbalance"] \
+            <= adv["current_imbalance"] + 1e-9
+    # clustered ICs leave the occupancy-seeded partition measurably
+    # imbalanced; the measured-weight replay must find a better one
+    assert any(a["accepted"] for a in advs)
+    assert advs[-1]["advised_imbalance"] < advs[-1]["current_imbalance"]
+    assert advs[-1]["per_cell_ratio"]["mean"] > 0
+
+
+@pytest.mark.slow
+def test_per_cell_units_match_value_columns_host_dist():
+    """Host-transport distributed ladder: per-rank sums of the per-cell
+    drift/density/force vectors equal the device-metrics value columns
+    exactly (exchange is receiver-side truth, checked >= 0)."""
+    from repro.observability import CELL_COLUMNS
+    from repro.observability import device_metrics as dm
+    spec = SimulationSpec(
+        scenario="clustered", scenario_params={"n": 96, "seed": 0},
+        physics=SPHConfig(alpha_visc=1.0, cfl=0.15),
+        dt_max=0.02, max_depth=3, integrator="timebin",
+        backend="distributed", ranks=4, transport="host",
+        observe=True)
+    sim = build_simulation(spec)
+    sim.step()
+    eng = sim.engine
+    cw = eng.device_cell_work_last
+    assert cw is not None and list(cw["columns"]) == list(CELL_COLUMNS)
+    cells = np.asarray(cw["cells"])
+    per_rank = np.asarray(cw["per_rank"])
+    # folding halo rows onto owners conserves every column
+    np.testing.assert_allclose(cells.sum(axis=0), per_rank.sum(axis=0),
+                               rtol=1e-6)
+    counts, values = eng.device_metrics_last
+    counts, values = np.asarray(counts), np.asarray(values)
+    ci = {k: i for i, k in enumerate(CELL_COLUMNS)}
+    for kind in ("density", "force"):
+        want = values[:, dm.VALUE_INDEX[f"{kind}_units"]].sum()
+        got = per_rank[:, ci[kind]].sum()
+        assert got == pytest.approx(want, rel=1e-6), kind
+    assert per_rank[:, ci["drift"]].sum() == pytest.approx(
+        counts[:, dm.COUNT_INDEX["drift_active"]].sum(), rel=1e-6)
+    assert (cells >= 0).all()
+
+
+def test_local_quadrant_density_cells_sum_to_pairs():
+    kw = dict(SCENARIOS["sedov"])
+    kw.update(integrator="global", backend="local", dt=0.004,
+              observe=True)
+    sim = build_simulation(SimulationSpec(**kw))
+    sim.step()
+    cw = sim.engine.device_cell_work_last
+    assert cw is not None
+    cells = np.asarray(cw["cells"])
+    cols = list(cw["columns"])
+    npairs = int(np.asarray(sim.engine.pairs.ci).shape[0])
+    assert cells[:, cols.index("density")].sum() == pytest.approx(npairs)
+    assert cells[:, cols.index("force")].sum() == pytest.approx(npairs)
+
+
+def test_end_cycle_always_emits_v3_keys():
+    """``cost_ratios`` (and friends) are always present — empty/None
+    fallbacks, never missing keys — so downstream readers need no
+    per-key existence checks."""
+    kw = dict(SCENARIOS["sedov"])
+    kw.update(integrator="global", backend="local", dt=0.004,
+              observe=True)
+    sim = build_simulation(SimulationSpec(**kw))
+    sim.step()
+    rec = sim.observer.records[-1]
+    assert rec["schema"] == METRICS_SCHEMA_VERSION
+    assert "cost_ratios" in rec and isinstance(rec["cost_ratios"], dict)
+    assert "observed_units" in rec \
+        and isinstance(rec["observed_units"], dict)
+    for key in ("cell_work", "cost_calibration", "advisor"):
+        assert key in rec
+    # jsonl round-trip preserves the always-present contract
+    buf = json.loads(json.dumps(jsonify(rec)))
+    assert "cost_ratios" in buf
 
 
 def test_flight_recorder_ring_dump_and_validation(tmp_path):
